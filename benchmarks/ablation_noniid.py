@@ -1,0 +1,41 @@
+"""Beyond-paper ablation: non-IID client data (Dirichlet partitions).
+
+The paper's experiments are IID.  Theorem 1 still holds per round, but
+heterogeneous clients raise the realized gradient-variance constants;
+this ablation shows the proposed scheme's accuracy degrades gracefully
+as alpha shrinks (more skew) while the scheme ordering is preserved.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.federated import system
+from benchmarks import common
+
+ALPHAS = [None, 1.0, 0.1]       # None = IID
+
+
+def run(rounds: int = 120, quick: bool = False):
+    rounds = 40 if quick else rounds
+    rows = []
+    for alpha in ALPHAS:
+        accs = {}
+        for scheme in ("ideal", "proposed", "fpr:0.7"):
+            res = system.run(system.FLConfig(
+                rounds=rounds, scheme=scheme, lr=5e-3, seed=1,
+                non_iid_alpha=alpha, eval_every=rounds))
+            accs[scheme] = res.accuracy[-1][1]
+        rows.append(["iid" if alpha is None else f"dir({alpha})",
+                     accs["ideal"], accs["proposed"], accs["fpr:0.7"]])
+    header = ["partition", "ideal", "proposed", "fpr0.7"]
+    common.print_table(header, rows, "Non-IID ablation (final accuracy)")
+    common.write_csv("ablation_noniid.csv", header, rows)
+
+    for r in rows:  # ordering preserved under skew
+        assert r[1] >= r[3] - 0.03, "ideal >= heavy pruning under skew"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

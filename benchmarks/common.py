@@ -1,0 +1,92 @@
+"""Shared benchmark plumbing: problem construction, scheme registry, CSV."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+import time
+from functools import partial
+
+import numpy as np
+
+from repro.core import tradeoff as T
+from repro.core import wireless as W
+from repro.core.convergence import ConvergenceBound, SmoothnessParams
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+SCHEMES = {
+    "proposed": T.solve_alternating,
+    "exhaustive": partial(T.solve_exhaustive, rho_grid=5, deadline_grid=24,
+                          refine=3),
+    "gba": T.solve_gba,
+    "fpr0.0": partial(T.solve_fpr, prune_rate=0.0),
+    "fpr0.35": partial(T.solve_fpr, prune_rate=0.35),
+    "fpr0.7": partial(T.solve_fpr, prune_rate=0.7),
+    "ideal": T.solve_ideal,
+}
+
+
+def build_problem(seed: int = 0, weight: float = 0.0004,
+                  num_clients: int = 5,
+                  cfg: W.WirelessConfig | None = None) -> T.TradeoffProblem:
+    """Paper Table-I instance with a seeded channel draw."""
+    cfg = cfg or W.WirelessConfig()
+    ch = W.Channel(num_clients, seed=seed)
+    h_up, h_down = ch.sample_gains()
+    samples = np.resize([30, 40, 50], num_clients).astype(np.float64)
+    bound = ConvergenceBound(SmoothnessParams(), samples)
+    return T.TradeoffProblem(
+        cfg=cfg, bound=bound, h_up=h_up, h_down=h_down,
+        tx_power=np.full(num_clients, cfg.tx_power_ue_w),
+        cpu_hz=np.full(num_clients, 5e9),
+        num_samples=samples,
+        max_prune=np.full(num_clients, 0.7),
+        weight=weight, num_rounds=200)
+
+
+def mean_cost(scheme: str, seeds: range, weight: float = 0.0004,
+              cfg: W.WirelessConfig | None = None) -> float:
+    """Average total cost (12a) of a scheme over channel draws."""
+    vals = []
+    for s in seeds:
+        prob = build_problem(seed=s, weight=weight, cfg=cfg)
+        vals.append(SCHEMES[scheme](prob).total_cost)
+    return float(np.mean(vals))
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def print_table(header: list[str], rows: list[list], title: str = "") -> None:
+    if title:
+        print(f"\n== {title} ==")
+    widths = [max(len(str(h)), *(len(_fmt(r[i])) for r in rows))
+              for i, h in enumerate(header)]
+    print("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        print("  ".join(_fmt(v).ljust(w) for v, w in zip(r, widths)))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,42 @@
+"""Fig. 2 — total cost vs UE maximum transmit power p_i.
+
+Sweeps p_i over 13..33 dBm (paper: around 23 dBm) for every scheme;
+total cost is (12a) averaged over seeded channel draws.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import wireless as W
+from benchmarks import common
+
+POWERS_DBM = [13, 18, 23, 28, 33]
+SCHEMES = ["proposed", "exhaustive", "gba", "fpr0.0", "fpr0.35", "fpr0.7"]
+
+
+def run(seeds: int = 8, quick: bool = False):
+    schemes = SCHEMES[:4] if quick else SCHEMES
+    n_seeds = 3 if quick else seeds
+    rows = []
+    for dbm in POWERS_DBM:
+        cfg = W.WirelessConfig(tx_power_ue_w=W.dbm_to_watt(dbm))
+        row = [dbm] + [common.mean_cost(s, range(n_seeds), cfg=cfg)
+                       for s in schemes]
+        rows.append(row)
+    header = ["p_dbm"] + SCHEMES[:len(schemes)]
+    common.print_table(header, rows, "Fig. 2: total cost vs transmit power")
+    common.write_csv("fig2_cost_vs_power.csv", header, rows)
+
+    # paper claims: cost decreases with power; proposed <= gba/fpr,
+    # close to exhaustive
+    ours = np.array([r[1] for r in rows])
+    assert np.all(np.diff(ours) < 0), "cost must fall with power"
+    for j in range(3, len(schemes) + 1):
+        assert np.all(ours <= np.array([r[j] for r in rows]) * (1 + 1e-6)), \
+            f"proposed must beat {header[j]}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

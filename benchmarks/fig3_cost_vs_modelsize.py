@@ -1,0 +1,40 @@
+"""Fig. 3 — total cost vs global model data size D_M.
+
+Paper: at small D_M all schemes coincide (bandwidth is plentiful); as D_M
+grows the proposed solution tracks exhaustive search and the gap to
+GBA/FPR widens.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import wireless as W
+from benchmarks import common
+
+MODEL_MBITS = [0.4, 0.8, 1.6, 3.2, 6.4]
+SCHEMES = ["proposed", "exhaustive", "gba", "fpr0.0", "fpr0.35", "fpr0.7"]
+
+
+def run(seeds: int = 8, quick: bool = False):
+    schemes = SCHEMES[:4] if quick else SCHEMES
+    n_seeds = 3 if quick else seeds
+    rows = []
+    for mbit in MODEL_MBITS:
+        cfg = W.WirelessConfig(model_bits=mbit * 1e6)
+        row = [mbit] + [common.mean_cost(s, range(n_seeds), cfg=cfg)
+                        for s in schemes]
+        rows.append(row)
+    header = ["D_M_mbit"] + SCHEMES[:len(schemes)]
+    common.print_table(header, rows, "Fig. 3: total cost vs model size")
+    common.write_csv("fig3_cost_vs_modelsize.csv", header, rows)
+
+    ours = np.array([r[1] for r in rows])
+    assert np.all(np.diff(ours) > 0), "cost must grow with model size"
+    gba = np.array([r[3] for r in rows])
+    assert ours[-1] <= gba[-1], "gap to GBA at large D_M"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig. 4 — impact of the trade-off weight lambda.
+
+As lambda grows the optimizer privileges the learning cost: FL latency
+(t~) rises while the learning cost m*sum K_i(q_i + K_i rho_i) falls.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import tradeoff as T
+from benchmarks import common
+
+LAMBDAS = [1e-5, 1e-4, 4e-4, 1e-3, 4e-3, 1e-2]
+
+
+def run(seeds: int = 10, quick: bool = False):
+    n_seeds = 4 if quick else seeds
+    rows = []
+    for lam in LAMBDAS:
+        lat, learn, rho = [], [], []
+        for s in range(n_seeds):
+            prob = common.build_problem(seed=s, weight=lam)
+            sol = T.solve_alternating(prob)
+            lat.append(sol.deadline)
+            learn.append(prob.bound.learning_cost(sol.per, sol.prune))
+            rho.append(float(np.mean(sol.prune)))
+        rows.append([lam, float(np.mean(lat)), float(np.mean(learn)),
+                     float(np.mean(rho))])
+    header = ["lambda", "fl_latency_s", "learning_cost", "mean_rho"]
+    common.print_table(header, rows, "Fig. 4: lambda sweep")
+    common.write_csv("fig4_lambda_sweep.csv", header, rows)
+
+    lat = np.array([r[1] for r in rows])
+    learn = np.array([r[2] for r in rows])
+    assert learn[-1] <= learn[0], "learning cost falls with lambda"
+    assert lat[-1] >= lat[0], "latency rises with lambda"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,19 @@
+"""Fig. 6 — test accuracy of the DNN (60+20 hidden) on the Fashion-MNIST
+stand-in (synthetic dataset, lower lr = 1e-4 scaled up for the synthetic
+task)."""
+
+from __future__ import annotations
+
+from repro.models import mlp
+from benchmarks import fig5_accuracy_shallow as fig5
+
+
+def run(rounds: int = 200, quick: bool = False):
+    return fig5.run(rounds=rounds, quick=quick, lr=2e-3,
+                    hidden=mlp.DNN_HIDDEN,
+                    csv_name="fig6_accuracy_dnn.csv",
+                    title="Fig. 6: accuracy, DNN")
+
+
+if __name__ == "__main__":
+    run()

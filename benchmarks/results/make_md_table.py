@@ -1,0 +1,41 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from the JSON reports.
+
+  python benchmarks/results/make_md_table.py [--mesh 16x16] [--fl] [--baseline]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--fl", action="store_true")
+    ap.add_argument("--baseline", action="store_true")
+    args = ap.parse_args()
+
+    root = os.path.join(HERE, "baseline") if args.baseline else HERE
+    rows = []
+    for p in sorted(glob.glob(os.path.join(root, "*.json"))):
+        is_fl = os.path.basename(p).startswith("fl_")
+        if is_fl != args.fl:
+            continue
+        r = json.load(open(p))
+        if r.get("mesh") != args.mesh:
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print("| arch | shape | t_comp | t_mem | t_coll | bottleneck | useful |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+              f"{r['t_memory']*1e3:.1f} | {r['t_collective']*1e3:.1f} | "
+              f"{r['bottleneck']} | {r['useful_flops_ratio']*100:.1f}% |")
+
+
+if __name__ == "__main__":
+    main()

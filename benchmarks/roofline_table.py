@@ -1,0 +1,66 @@
+"""Aggregate dry-run roofline reports (benchmarks/results/*.json) into the
+§Roofline table: three terms, bottleneck, useful-FLOPs ratio per combo.
+
+The dry-run itself must be executed separately (it needs 512 placeholder
+devices):  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/results
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+
+def load_reports(pattern: str = "*.json") -> list[dict]:
+    paths = sorted(glob.glob(os.path.join(common.RESULTS_DIR, pattern)))
+    out = []
+    for p in paths:
+        r = json.load(open(p))
+        r["variant"] = "fl" if os.path.basename(p).startswith("fl_") \
+            else "plain"
+        out.append(r)
+    return out
+
+
+def _dominant_ms(r: dict) -> float:
+    return max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e3
+
+
+def run(quick: bool = False):
+    reports = [r for r in load_reports() if "arch" in r]
+    if not reports:
+        print("\n== Roofline table: no dry-run reports found ==")
+        print("run: PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--out benchmarks/results")
+        return []
+    baseline = {(r["arch"], r["shape"], r["mesh"], r["variant"]): r
+                for r in load_reports(os.path.join("baseline", "*.json"))
+                if "arch" in r}
+    rows = []
+    for r in reports:
+        base = baseline.get((r["arch"], r["shape"], r["mesh"], r["variant"]))
+        speedup = (_dominant_ms(base) / _dominant_ms(r)) if base else None
+        rows.append([
+            r["arch"], r["shape"], r["variant"], r["mesh"],
+            r["t_compute"] * 1e3, r["t_memory"] * 1e3,
+            r["t_collective"] * 1e3, r["bottleneck"],
+            r["useful_flops_ratio"],
+            r["peak_memory_per_chip"] / 2**30,
+            f"{speedup:.1f}x" if speedup else "-",
+        ])
+    rows.sort(key=lambda x: (x[0], x[1], x[2], x[3]))
+    header = ["arch", "shape", "step", "mesh", "t_comp_ms", "t_mem_ms",
+              "t_coll_ms", "bottleneck", "useful_ratio", "hbm_GiB",
+              "vs_baseline"]
+    common.print_table(header, rows, "Roofline terms per (arch x shape x "
+                       "mesh); vs_baseline = dominant-term speedup over the "
+                       "paper-faithful baseline snapshot")
+    common.write_csv("roofline_table.csv", header, rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Serving example: batched greedy decoding from a (reduced) assigned
+architecture, with optional TPU block pruning applied to the weights —
+demonstrating the decode path + KV/recurrent caches + the pruning module
+on the serving side.
+
+  PYTHONPATH=src python examples/serve_pruned.py --arch smollm-135m --rho 0.3
+  PYTHONPATH=src python examples/serve_pruned.py --arch xlstm-125m --steps 32
+  PYTHONPATH=src python examples/serve_pruned.py --arch whisper-base   # enc-dec
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import pruning
+from repro.data import tokens
+from repro.models import model as M
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m", choices=list(ARCH_NAMES))
+    ap.add_argument("--rho", type=float, default=0.0,
+                    help="block pruning rate applied before serving")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--window", type=int, default=None,
+                    help="sliding-window cache width (rolling buffer)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke_variant()
+    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.rho > 0:
+        masks = pruning.block_masks(params, args.rho, block=16)
+        params = pruning.apply_masks(params, masks)
+        print(f"applied block pruning rho={args.rho} "
+              f"(achieved {float(pruning.achieved_rate(params, masks)):.3f})")
+
+    b = args.batch
+    cache_len = args.window or (args.prompt_len + args.steps)
+    cache = M.init_cache(cfg, b, cache_len, window=args.window)
+    if cfg.num_memory_tokens:
+        memory = jax.random.normal(
+            jax.random.PRNGKey(1), (b, cfg.num_memory_tokens, cfg.memory_dim_))
+        cache = M.fill_cross_caches(cfg, params, cache, memory)
+        print(f"filled cross-attention caches from "
+              f"{cfg.num_memory_tokens} stub frontend embeddings")
+
+    step = jax.jit(lambda p, t, c: M.decode_step(cfg, p, t, c,
+                                                 window=args.window))
+
+    # prefill via teacher-forced decode (smoke scale), then greedy decode
+    stream = tokens.TokenStream(cfg.vocab_size, seed=args.seed)
+    prompt = jnp.asarray(stream.sample(b, args.prompt_len))
+    for t in range(args.prompt_len):
+        logits, cache = step(params, prompt[:, t:t + 1], cache)
+
+    out = []
+    t0 = time.time()
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for _ in range(args.steps):
+        out.append(np.asarray(tok)[:, 0])
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+    dt = time.time() - t0
+
+    gen = np.stack(out, axis=1)
+    print(f"generated {args.steps} tokens x {b} sequences in {dt:.2f}s "
+          f"({b*args.steps/dt:.0f} tok/s on CPU)")
+    for i in range(min(b, 2)):
+        print(f"  seq{i}: {gen[i][:16].tolist()}...")
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Trade-off playground: sweep one wireless parameter and watch Algorithm 1
+re-balance pruning vs bandwidth vs packet error (paper Figs. 2-4 in one
+script).
+
+  PYTHONPATH=src python examples/tradeoff_playground.py --sweep power
+  PYTHONPATH=src python examples/tradeoff_playground.py --sweep modelsize
+  PYTHONPATH=src python examples/tradeoff_playground.py --sweep lambda
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.core import tradeoff, wireless
+from repro.core.convergence import ConvergenceBound, SmoothnessParams
+
+I = 5
+SAMPLES = np.array([30, 40, 50, 30, 40], np.float64)
+
+
+def solve(cfg: wireless.WirelessConfig, lam: float, seed: int = 0):
+    ch = wireless.Channel(I, seed=seed)
+    h_up, h_down = ch.sample_gains()
+    bound = ConvergenceBound(SmoothnessParams(), SAMPLES)
+    prob = tradeoff.TradeoffProblem(
+        cfg=cfg, bound=bound, h_up=h_up, h_down=h_down,
+        tx_power=np.full(I, cfg.tx_power_ue_w), cpu_hz=np.full(I, 5e9),
+        num_samples=SAMPLES, max_prune=np.full(I, 0.7), weight=lam)
+    sol = tradeoff.solve_alternating(prob)
+    return sol, prob
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", default="power",
+                    choices=["power", "modelsize", "lambda"])
+    ap.add_argument("--seeds", type=int, default=5)
+    args = ap.parse_args()
+
+    print(f"{'x':>10s} {'cost':>9s} {'latency_ms':>11s} {'mean_rho':>9s} "
+          f"{'mean_PER':>9s} {'sumB_MHz':>9s}")
+    if args.sweep == "power":
+        xs = [13, 18, 23, 28, 33]
+        make = lambda x: (wireless.WirelessConfig(
+            tx_power_ue_w=wireless.dbm_to_watt(x)), 0.0004)
+    elif args.sweep == "modelsize":
+        xs = [0.4, 0.8, 1.6, 3.2, 6.4]
+        make = lambda x: (wireless.WirelessConfig(model_bits=x * 1e6), 0.0004)
+    else:
+        xs = [1e-5, 1e-4, 4e-4, 1e-3, 4e-3, 1e-2]
+        make = lambda x: (wireless.WirelessConfig(), x)
+
+    for x in xs:
+        cfg, lam = make(x)
+        cost, lat, rho, per, bw = [], [], [], [], []
+        for s in range(args.seeds):
+            sol, prob = solve(cfg, lam, seed=s)
+            cost.append(sol.total_cost)
+            lat.append(sol.deadline)
+            rho.append(sol.prune.mean())
+            per.append(sol.per.mean())
+            bw.append(sol.bandwidth.sum())
+        print(f"{x:>10g} {np.mean(cost):>9.4f} {np.mean(lat)*1e3:>11.1f} "
+              f"{np.mean(rho):>9.3f} {np.mean(per):>9.4f} "
+              f"{np.mean(bw)/1e6:>9.2f}")
+
+
+if __name__ == "__main__":
+    main()

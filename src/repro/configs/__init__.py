@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture plus the
+paper's own experiment configs."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, BlockSpec, InputShape, StageSpec, INPUT_SHAPES
+
+_ARCH_MODULES = {
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "llama-3.2-vision-11b": "repro.configs.llama32_vision_11b",
+    "smollm-135m": "repro.configs.smollm_135m",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "whisper-base": "repro.configs.whisper_base",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def all_configs() -> dict:
+    return {n: get_config(n) for n in ARCH_NAMES}
+
+
+__all__ = ["ArchConfig", "BlockSpec", "StageSpec", "InputShape",
+           "INPUT_SHAPES", "ARCH_NAMES", "get_config", "all_configs"]

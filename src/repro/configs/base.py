@@ -1,0 +1,193 @@
+"""Architecture / run configuration schema.
+
+An ``ArchConfig`` fully describes one of the assigned architectures as a
+sequence of *stages*; each stage scans a super-block of heterogeneous
+sub-blocks ``repeats`` times (so interleaved patterns like RecurrentGemma's
+[rec, rec, attn] or xLSTM's [mlstm, slstm] stay scan-able and the HLO stays
+small for 62-layer models).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.models.attention import AttnSpec, MLASpec
+from repro.models.moe import MoESpec
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One sub-block of a super-block.
+
+    kind: attn | local_attn | cross_attn | mla | mlstm | slstm | rglru
+    ffn:  mlp | moe | none
+    """
+    kind: str
+    ffn: str = "mlp"
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    repeats: int
+    blocks: tuple[BlockSpec, ...]
+
+    @property
+    def num_layers(self) -> int:
+        return self.repeats * len(self.blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    source: str                       # citation (arXiv / hf model card)
+
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    stages: tuple[StageSpec, ...]
+
+    head_dim: Optional[int] = None    # default d_model // num_heads
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    norm: str = "rms"                 # rms | ln
+    act: str = "silu"
+    tie_embeddings: bool = True
+
+    # local attention (hybrid archs) and the long-context decode variant
+    local_window: int = 2048          # window for "local_attn" blocks
+    long_context_window: Optional[int] = 8192
+    #   - for full-attention archs, long_500k runs a rolling-buffer
+    #     sliding-window cache of this width; None => arch skips long_500k
+
+    moe: Optional[MoESpec] = None
+    mla: Optional[MLASpec] = None
+
+    # recurrent sizing
+    rnn_width: Optional[int] = None   # RG-LRU width (default d_model)
+    conv_width: int = 4
+    mlstm_proj_factor: float = 2.0    # mLSTM inner width / d_model
+
+    # stub modality frontend (audio frames / vision patch embeddings)
+    encoder_layers: int = 0           # whisper encoder depth
+    num_memory_tokens: int = 0        # frames (1500) / image patches (1600)
+    memory_dim: Optional[int] = None  # defaults to d_model
+
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "block"              # none | block — checkpoint super-blocks
+    moe_capacity_factor: float = 1.25
+
+    # ---- derived ----------------------------------------------------------
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def num_layers(self) -> int:
+        return sum(s.num_layers for s in self.stages) + self.encoder_layers
+
+    @property
+    def pdtype(self):
+        return _DTYPES[self.param_dtype]
+
+    @property
+    def cdtype(self):
+        return _DTYPES[self.compute_dtype]
+
+    @property
+    def rnn_width_(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def memory_dim_(self) -> int:
+        return self.memory_dim or self.d_model
+
+    def attn_spec(self, kind: str, window_override: Optional[int] = None) -> AttnSpec:
+        if kind == "cross_attn":
+            return AttnSpec(self.num_heads, self.num_kv_heads, self.head_dim_,
+                            self.rope_theta, qkv_bias=self.qkv_bias,
+                            causal=False, window=None, use_rope=False)
+        window = window_override
+        if window is None and kind == "local_attn":
+            window = self.local_window
+        return AttnSpec(self.num_heads, self.num_kv_heads, self.head_dim_,
+                        self.rope_theta, qkv_bias=self.qkv_bias,
+                        causal=True, window=window)
+
+    def mla_spec(self, window_override: Optional[int] = None) -> MLASpec:
+        assert self.mla is not None
+        if window_override is None:
+            return self.mla
+        return dataclasses.replace(self.mla, window=window_override)
+
+    def moe_spec(self) -> MoESpec:
+        assert self.moe is not None
+        return dataclasses.replace(self.moe,
+                                   capacity_factor=self.moe_capacity_factor)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke_variant(self) -> "ArchConfig":
+        """Reduced config for CPU smoke tests: <=2 super-layers,
+        d_model <= 512, <= 4 experts."""
+        # keep one repeat of each stage, deduping sub-blocks by (kind, ffn)
+        # so every block family in the arch is exercised
+        small_stages = []
+        for st in self.stages[:2]:
+            seen, blocks = set(), []
+            for b in st.blocks:
+                if (b.kind, b.ffn) not in seen:
+                    seen.add((b.kind, b.ffn))
+                    blocks.append(b)
+            small_stages.append(StageSpec(1, tuple(blocks[:3])))
+        d_model = min(self.d_model, 128)
+        heads = min(self.num_heads, 4)
+        kv = min(self.num_kv_heads, heads)
+        heads = (heads // kv) * kv if heads % kv else heads
+        kw = dict(
+            stages=tuple(small_stages), d_model=d_model,
+            num_heads=heads, num_kv_heads=kv, head_dim=d_model // heads,
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            encoder_layers=min(self.encoder_layers, 2),
+            num_memory_tokens=min(self.num_memory_tokens, 16),
+            rnn_width=min(self.rnn_width_, d_model),
+            param_dtype="float32", compute_dtype="float32", remat="none",
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe, num_experts=min(self.moe.num_experts, 4),
+                top_k=min(self.moe.top_k, 2), d_ff=min(self.moe.d_ff, 128))
+        if self.mla is not None:
+            kw["mla"] = dataclasses.replace(
+                self.mla, num_heads=heads, q_lora_rank=64, kv_lora_rank=32,
+                nope_dim=16, rope_dim=16, v_head_dim=d_model // heads)
+        return self.replace(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned input shape."""
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                 # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,7 @@
+"""Core contribution of the paper: wireless model, pruning, convergence
+theory, the communication-learning trade-off optimizer, and packet-error-
+aware aggregation."""
+
+from repro.core import aggregation, convergence, pruning, tradeoff, wireless
+
+__all__ = ["aggregation", "convergence", "pruning", "tradeoff", "wireless"]

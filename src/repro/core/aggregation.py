@@ -1,0 +1,65 @@
+"""Packet-error-aware global aggregation (paper Eq. (5)/(6)).
+
+  g_s = sum_i K_i grad_i C_i  /  sum_i K_i C_i,
+  C_i = 1 w.p. (1 - q_i),  0 w.p. q_i   (errored packet -> dropped)
+
+Two execution paths:
+
+* ``aggregate``       — host/single-device: takes stacked per-client grads.
+* ``psum_aggregate``  — device-side body for shard_map: each client shard
+  contributes K_i * C_i * grad_i and a single ``psum`` over the client
+  mesh axes forms numerator and denominator (the BS reduce).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_arrivals", "aggregate", "psum_aggregate"]
+
+PyTree = Any
+
+
+def sample_arrivals(key: jax.Array, per: jnp.ndarray) -> jnp.ndarray:
+    """Draw the packet indicators C_i ~ Bernoulli(1 - q_i)."""
+    return (jax.random.uniform(key, jnp.asarray(per).shape) >= per).astype(jnp.float32)
+
+
+def aggregate(client_grads: PyTree, num_samples: jnp.ndarray,
+              arrivals: jnp.ndarray) -> PyTree:
+    """Eq. (5) on stacked gradients: every leaf has leading client dim I.
+
+    If *every* packet is errored the denominator is zero; the BS then skips
+    the update (returns zero gradient), matching the drop rule.
+    """
+    w = jnp.asarray(num_samples, jnp.float32) * arrivals      # K_i C_i
+    denom = jnp.sum(w)
+    safe = jnp.maximum(denom, 1.0)
+
+    def reduce(leaf: jnp.ndarray) -> jnp.ndarray:
+        shape = (-1,) + (1,) * (leaf.ndim - 1)
+        num = jnp.sum(leaf * w.reshape(shape), axis=0)
+        return jnp.where(denom > 0.0, num / safe, jnp.zeros_like(num))
+
+    return jax.tree.map(reduce, client_grads)
+
+
+def psum_aggregate(local_grad: PyTree, k_i: jnp.ndarray, c_i: jnp.ndarray,
+                   axis_names) -> PyTree:
+    """Distributed Eq. (5): call inside shard_map, one client per shard.
+
+    ``axis_names`` is the mesh axis (or tuple of axes) enumerating clients,
+    e.g. ("pod", "data").  Exactly one psum per leaf + one scalar psum.
+    """
+    w = k_i * c_i
+    denom = jax.lax.psum(w, axis_names)
+    safe = jnp.maximum(denom, 1.0)
+
+    def reduce(leaf: jnp.ndarray) -> jnp.ndarray:
+        num = jax.lax.psum(leaf * w, axis_names)
+        return jnp.where(denom > 0.0, num / safe, jnp.zeros_like(num))
+
+    return jax.tree.map(reduce, local_grad)

@@ -1,0 +1,206 @@
+"""Network pruning — the paper's compression mechanism, adapted to TPU.
+
+The paper defines the pruning rate rho_i = D_P^i / D_M: the *fraction of
+model bytes removed* before local training.  Two concrete instantiations:
+
+* ``magnitude_masks`` — classic unstructured global magnitude pruning
+  (exactly what edge-FL papers mean); used for the paper-scale MLP/DNN
+  reproduction experiments.
+
+* ``block_masks`` — TPU-native structured pruning: every 2-D weight matrix
+  is partitioned into (block, block) tiles (default 128x128 = one MXU
+  pass); tiles are ranked by L2 norm and the lowest-norm rho fraction is
+  dropped.  ``kernels/block_sparse_matmul`` can then *skip* dropped tiles,
+  so rho buys a real (1-rho)x FLOP/DMA reduction — making the paper's
+  latency model t^c ~ (1-rho) physically accurate on TPU.
+
+Masks are pytrees matching the parameter pytree; 1-D tensors (biases,
+norm scales) are never pruned (negligible bytes, disproportionate damage).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "prunable",
+    "magnitude_masks",
+    "block_masks",
+    "apply_masks",
+    "achieved_rate",
+    "ones_masks",
+]
+
+PyTree = Any
+DEFAULT_BLOCK = 128
+
+
+def prunable(path: tuple, leaf: jnp.ndarray) -> bool:
+    """Only >=2-D weight tensors are prunable; biases/scales stay dense."""
+    del path
+    return leaf.ndim >= 2
+
+
+def _flatten_prunable(params: PyTree):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    flags = [leaf.ndim >= 2 for leaf in leaves]
+    return leaves, treedef, flags
+
+
+def ones_masks(params: PyTree) -> PyTree:
+    """rho = 0 masks (everything kept).  Masks are boolean pytrees: 1 byte
+    per element instead of the weight dtype's width, and XLA fuses the
+    select into neighbouring ops."""
+    return jax.tree.map(lambda w: jnp.ones(w.shape, dtype=bool), params)
+
+
+def magnitude_masks(params: PyTree, prune_rate: float) -> PyTree:
+    """Global unstructured magnitude pruning at rate ``prune_rate``.
+
+    The threshold is computed over *all* prunable leaves jointly, matching
+    rho = pruned-bytes / model-bytes as in the paper.
+    """
+    prune_rate = jnp.clip(prune_rate, 0.0, 1.0)
+    leaves, treedef, flags = _flatten_prunable(params)
+    mags = jnp.concatenate([jnp.abs(l).reshape(-1)
+                            for l, f in zip(leaves, flags) if f])
+    # threshold = rho-quantile of |w|; keep w where |w| > threshold
+    thresh = jnp.quantile(mags, prune_rate)
+    masked = [
+        (jnp.abs(l) > thresh) if f
+        else jnp.ones(l.shape, bool)
+        for l, f in zip(leaves, flags)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def _pad_to_blocks(w: jnp.ndarray, block: int) -> jnp.ndarray:
+    m, n = w.shape
+    pm, pn = (-m) % block, (-n) % block
+    if pm or pn:
+        w = jnp.pad(w, ((0, pm), (0, pn)))
+    return w
+
+
+def block_l2_norms(w: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
+    """Squared L2 norm of each (block x block) tile of a 2-D matrix."""
+    w = _pad_to_blocks(w, block)
+    m, n = w.shape
+    t = w.reshape(m // block, block, n // block, block)
+    return jnp.sum(t.astype(jnp.float32) ** 2, axis=(1, 3))
+
+
+def _tile_element_counts(m: int, n: int, lead: int, block: int) -> jnp.ndarray:
+    """Number of *real* (unpadded) elements in each tile of an (m, n) matrix,
+    replicated over ``lead`` leading batch entries."""
+    rows = jnp.minimum(block, m - jnp.arange(0, m + (-m) % block, block))
+    cols = jnp.minimum(block, n - jnp.arange(0, n + (-n) % block, block))
+    counts = rows[:, None] * cols[None, :]
+    return jnp.broadcast_to(counts, (lead,) + counts.shape)
+
+
+def block_masks(params: PyTree, prune_rate: float,
+                block: int = DEFAULT_BLOCK, scope: str = "leaf") -> PyTree:
+    """TPU block-structured magnitude pruning.
+
+    Each >=2-D leaf is reduced to tile L2 norms over its *last two* dims
+    (leading dims — layer stacks, experts — are treated batch-wise).  The
+    threshold is an *element-count-weighted* quantile over tile norms, so
+    the achieved rho matches the requested byte fraction even with ragged
+    edge tiles.  rho = 0 keeps everything exactly.
+
+    scope="leaf" (default) ranks tiles within each tensor, so every matmul
+    loses the same rho fraction — this matches the paper's latency model
+    t^c ~ (1-rho) per layer and is robust to per-layer init-scale
+    differences (a globally ranked threshold can annihilate a small-scale
+    tensor, e.g. 0.02-std embeddings vs fan-in-scaled dense weights).
+    scope="global" ranks all tiles jointly (classic global magnitude
+    pruning).
+    """
+    prune_rate = float(np.clip(prune_rate, 0.0, 1.0)) if not isinstance(
+        prune_rate, jnp.ndarray) else jnp.clip(prune_rate, 0.0, 1.0)
+    rate = jnp.asarray(prune_rate)
+    keep_all = rate <= 0.0
+    leaves, treedef, flags = _flatten_prunable(params)
+
+    def tile_norms(leaf: jnp.ndarray) -> jnp.ndarray:
+        lead = leaf.shape[:-2]
+        w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+        norms = jax.vmap(functools.partial(block_l2_norms, block=block))(w2)
+        return norms.reshape(lead + norms.shape[1:])
+
+    def weighted_thresh(norms_cat: jnp.ndarray, counts_cat: jnp.ndarray):
+        """Smallest kept norm: tiles whose cumulative element mass is
+        <= rate*total are dropped (side="right": an exact tile boundary
+        drops the boundary tile; floor semantics otherwise)."""
+        order = jnp.argsort(norms_cat)
+        sorted_norms = norms_cat[order]
+        cum = jnp.cumsum(counts_cat[order])
+        idx = jnp.searchsorted(cum / cum[-1], rate, side="right")
+        return sorted_norms[jnp.clip(idx, 0, sorted_norms.size - 1)]
+
+    def leaf_counts(leaf: jnp.ndarray) -> jnp.ndarray:
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        lead = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
+            if leaf.ndim > 2 else 1
+        return _tile_element_counts(m, n, lead, block)
+
+    all_norms = [tile_norms(l) if f else None for l, f in zip(leaves, flags)]
+
+    if scope == "global":
+        norms_cat = jnp.concatenate(
+            [n.reshape(-1) for n, f in zip(all_norms, flags) if f])
+        counts_cat = jnp.concatenate(
+            [leaf_counts(l).reshape(-1) for l, f in zip(leaves, flags) if f]
+        ).astype(jnp.float32)
+        g_thresh = weighted_thresh(norms_cat, counts_cat)
+        threshes = [g_thresh if f else None for f in flags]
+    elif scope == "leaf":
+        threshes = [
+            weighted_thresh(n.reshape(-1),
+                            leaf_counts(l).reshape(-1).astype(jnp.float32))
+            if f else None
+            for l, f, n in zip(leaves, flags, all_norms)
+        ]
+    else:
+        raise ValueError(f"scope must be 'leaf' or 'global', got {scope!r}")
+
+    def expand(leaf: jnp.ndarray, norms: jnp.ndarray,
+               thresh: jnp.ndarray) -> jnp.ndarray:
+        keep = (norms >= thresh) | keep_all
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        keep = jnp.repeat(jnp.repeat(keep, block, axis=-2), block, axis=-1)
+        return keep[..., :m, :n]
+
+    masked = [
+        expand(l, n, t) if f else jnp.ones(l.shape, bool)
+        for l, f, n, t in zip(leaves, flags, all_norms, threshes)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def apply_masks(params: PyTree, masks: PyTree) -> PyTree:
+    """W~ = W * M — the pruned local model the UE trains on.  Boolean masks
+    apply as a select; numeric masks (legacy) as a multiply."""
+    def one(w, m):
+        if m.dtype == jnp.bool_:
+            return jnp.where(m, w, jnp.zeros((), w.dtype))
+        return w * m
+    return jax.tree.map(one, params, masks)
+
+
+def achieved_rate(params: PyTree, masks: PyTree) -> jnp.ndarray:
+    """Realized rho = pruned-elements / total-elements over prunable leaves."""
+    leaves, _, flags = _flatten_prunable(params)
+    mask_leaves = jax.tree_util.tree_leaves(masks)
+    kept = sum(jnp.sum(m.astype(jnp.float32))
+               for m, f in zip(mask_leaves, flags) if f)
+    # python float, not int: a >2^31-element model overflows the int32
+    # weak-type promotion of (traced scalar / python int)
+    total = float(sum(m.size for m, f in zip(mask_leaves, flags) if f))
+    return 1.0 - kept / total

@@ -1,0 +1,412 @@
+"""Communication-learning trade-off optimizer (paper §IV, Algorithm 1).
+
+Solves problem (14):
+
+  min_{rho, B, t}  (1-lambda) * t  +  lambda * m * sum_i K_i (q_i + K_i rho_i)
+  s.t.  t_i^c + t_i^u <= t,   0 <= rho_i <= rho_i^max,
+        sum_i B_i <= B,       B_i >= 0,
+
+by alternating two closed-form sub-problems:
+
+  * Pruning (fixed B):  objective (17a) is convex piecewise-linear in the
+    deadline t~ with breakpoints at the no-pruning latencies
+    t_i^np = D_M/R_i^u + K_i d^c/f_i;  Proposition 1 picks either t~min or
+    the first breakpoint where the slope turns non-negative, and Eq. (16)
+    recovers rho_i*(t~) = max{1 - t~/t_i^np, 0}.
+
+  * Bandwidth (fixed rho, t~): by Lemma 1 both q_i(B_i) and R_i^u(B_i) are
+    increasing, so the optimum is the *minimum* bandwidth meeting the
+    deadline; Eq. (21) is solved per-UE by bisection.  Lemma 2 guarantees
+    sum_i B_i* <= B stays feasible across iterations.
+
+Baselines from §V are provided: GBA, FPR, exhaustive search, ideal FL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from repro.core.convergence import ConvergenceBound
+from repro.core.wireless import (
+    WirelessConfig,
+    packet_error_rate,
+    round_latency,
+    training_latency,
+    uplink_rate,
+    upload_latency,
+)
+
+__all__ = [
+    "TradeoffProblem",
+    "TradeoffSolution",
+    "solve_pruning",
+    "solve_bandwidth",
+    "solve_alternating",
+    "solve_gba",
+    "solve_fpr",
+    "solve_exhaustive",
+    "solve_ideal",
+]
+
+_LN2 = float(np.log(2.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class TradeoffProblem:
+    """One-round problem instance: wireless config + population + channel."""
+
+    cfg: WirelessConfig
+    bound: ConvergenceBound
+    h_up: np.ndarray             # uplink gains h_i^u
+    h_down: np.ndarray           # downlink gains h_i^d
+    tx_power: np.ndarray         # p_i
+    cpu_hz: np.ndarray           # f_i
+    num_samples: np.ndarray      # K_i
+    max_prune: np.ndarray        # rho_i^max
+    weight: float = 0.0004       # lambda
+    num_rounds: int = 200        # S (for psi)
+
+    @property
+    def num_clients(self) -> int:
+        return int(np.asarray(self.h_up).size)
+
+    # -- latency building blocks -------------------------------------------
+
+    def compute_latency(self, prune: np.ndarray) -> np.ndarray:
+        """t_i^c for given pruning rates."""
+        return training_latency(self.cfg, prune, self.num_samples, self.cpu_hz)
+
+    def uplink_rates(self, bandwidth: np.ndarray) -> np.ndarray:
+        return uplink_rate(bandwidth, self.tx_power, self.h_up,
+                           self.cfg.noise_psd_w_per_hz)
+
+    def per(self, bandwidth: np.ndarray) -> np.ndarray:
+        return packet_error_rate(bandwidth, self.tx_power, self.h_up,
+                                 self.cfg.noise_psd_w_per_hz, self.cfg.waterfall_m0)
+
+    def no_prune_latency(self, bandwidth: np.ndarray) -> np.ndarray:
+        """t_i^np = D_M/R_i^u + K_i d^c/f_i — the per-UE breakpoints."""
+        rates = self.uplink_rates(bandwidth)
+        with np.errstate(divide="ignore"):
+            t_u = self.cfg.model_bits / rates
+        t_u = np.where(rates > 0.0, t_u, np.inf)
+        return t_u + self.compute_latency(np.zeros(self.num_clients))
+
+    def rate_ceiling(self) -> np.ndarray:
+        """lim_{B->inf} R_i^u = p_i h_i^u / (N0 ln 2) — uplink capacity."""
+        return np.asarray(self.tx_power) * np.asarray(self.h_up) \
+            / (self.cfg.noise_psd_w_per_hz * _LN2)
+
+    # -- objectives ----------------------------------------------------------
+
+    def inner_cost(self, deadline: float, bandwidth: np.ndarray,
+                   prune: np.ndarray) -> float:
+        """(14a): (1-lambda) t~ + lambda m sum_i K_i (q_i + K_i rho_i)."""
+        q = self.per(bandwidth)
+        return ((1.0 - self.weight) * deadline
+                + self.weight * self.bound.learning_cost(q, prune))
+
+    def total_cost(self, bandwidth: np.ndarray, prune: np.ndarray) -> float:
+        """(12a): the true weighted sum including broadcast/aggregation and psi."""
+        t = round_latency(self.cfg, self.h_down, prune, bandwidth, self.tx_power,
+                          self.h_up, self.num_samples, self.cpu_hz)
+        q = self.per(bandwidth)
+        gamma = self.bound.gamma(q, prune, self.num_rounds)
+        return (1.0 - self.weight) * t + self.weight * gamma
+
+
+@dataclasses.dataclass
+class TradeoffSolution:
+    prune: np.ndarray
+    bandwidth: np.ndarray
+    deadline: float
+    inner_cost: float
+    total_cost: float
+    per: np.ndarray
+    iterations: int = 0
+    feasible: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Sub-problem A: pruning rates (Proposition 1 + Eq. 16)
+# ---------------------------------------------------------------------------
+
+def prune_rates_for_deadline(t_np: np.ndarray, deadline: float) -> np.ndarray:
+    """Eq. (16): rho_i^min(t~) = max{1 - t~/t_i^np, 0}."""
+    return np.maximum(1.0 - deadline / np.asarray(t_np), 0.0)
+
+
+def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray
+                  ) -> tuple[float, np.ndarray]:
+    """Proposition 1: closed-form optimal deadline t~* and pruning rates.
+
+    The objective g(t~) = (1-lambda) t~ + lambda m sum K_i^2 rho_i^min(t~)
+    is convex piecewise-linear; its minimum sits at t~min or at the first
+    breakpoint t_i^np (ascending) where the slope turns >= 0.
+    """
+    lam, m = prob.weight, prob.bound.m
+    k = np.asarray(prob.num_samples, dtype=np.float64)
+    t_np = prob.no_prune_latency(bandwidth)
+
+    t_min = float(np.max(t_np * (1.0 - prob.max_prune)))
+    t_max = float(np.max(t_np))
+    if not np.isfinite(t_max):
+        # some UE has zero uplink rate: no finite deadline exists
+        return np.inf, np.ones(prob.num_clients)
+
+    def slope_at(t: float) -> float:
+        # slope of g on the segment just above t: active UEs have t_i^np > t
+        active = t_np > t
+        return (1.0 - lam) - lam * m * float(np.sum(k[active] ** 2 / t_np[active]))
+
+    # Candidate vertices: t~min plus every breakpoint within (t~min, t~max].
+    candidates = [t_min] + sorted(float(t) for t in t_np
+                                  if t_min < t <= t_max) + [t_max]
+    # Closed-form walk (Prop. 1): first vertex whose rightward slope >= 0.
+    t_star = candidates[-1]
+    for t in candidates:
+        if slope_at(t) >= 0.0:
+            t_star = t
+            break
+    rho = np.minimum(prune_rates_for_deadline(t_np, t_star), prob.max_prune)
+    return float(t_star), rho
+
+
+# ---------------------------------------------------------------------------
+# Sub-problem B: bandwidth allocation (Eq. 21, bisection)
+# ---------------------------------------------------------------------------
+
+def min_bandwidth_for_rates(target_rate: np.ndarray, tx_power: np.ndarray,
+                            h_up: np.ndarray, noise_psd: float,
+                            iters: int = 80) -> np.ndarray:
+    """Vectorised bisection on R^u(B) = target (Eq. 21), any broadcastable
+    shapes.  R^u(B) is increasing in B (Lemma 1); targets at/above the
+    capacity ceiling p h / (N0 ln 2) return inf."""
+    target, p, h = np.broadcast_arrays(
+        np.asarray(target_rate, dtype=np.float64),
+        np.asarray(tx_power, dtype=np.float64),
+        np.asarray(h_up, dtype=np.float64))
+    ceiling = p * h / (noise_psd * _LN2)
+    feasible = target < ceiling
+    pos = target > 0.0
+
+    # Initial upper bracket: grow hi geometrically from a capacity-based guess.
+    safe_target = np.where(pos, target, 1.0)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        snr_at_target = np.clip(p * h / (safe_target * noise_psd), 0.0, 1e300)
+        guess = safe_target / np.maximum(np.log2(1.0 + snr_at_target), 1e-12)
+    hi = np.where(pos, np.maximum(guess, 1.0), 1.0)
+    for _ in range(200):
+        r = uplink_rate(hi, p, h, noise_psd)
+        need = feasible & pos & (r < target)
+        if not np.any(need):
+            break
+        hi = np.where(need, hi * 2.0, hi)
+    lo = np.zeros_like(hi)
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        r = uplink_rate(mid, p, h, noise_psd)
+        below = r < target
+        lo = np.where(below, mid, lo)
+        hi = np.where(below, hi, mid)
+    out = np.where(pos, hi, 0.0)
+    return np.where(feasible | ~pos, out, np.inf)
+
+
+def solve_bandwidth(prob: TradeoffProblem, prune: np.ndarray, deadline,
+                    iters: int = 80) -> np.ndarray:
+    """Eq. (21): per-UE minimum bandwidth meeting the deadline.
+
+    ``prune`` may carry extra leading batch dims (grid search); ``deadline``
+    broadcasts against it.
+    """
+    prune = np.asarray(prune, dtype=np.float64)
+    deadline = np.asarray(deadline, dtype=np.float64)
+    if deadline.ndim < prune.ndim:  # scalar/batched deadline vs (..., I) prune
+        deadline = deadline[..., None]
+    prune, deadline = np.broadcast_arrays(prune, deadline)
+    t_c = training_latency(prob.cfg, prune, prob.num_samples, prob.cpu_hz)
+    slack = deadline - t_c
+    payload = (1.0 - prune) * prob.cfg.model_bits
+    with np.errstate(divide="ignore", invalid="ignore"):
+        target = payload / slack
+    bw = min_bandwidth_for_rates(np.where((payload > 0) & (slack > 0), target, 0.0),
+                                 prob.tx_power, prob.h_up,
+                                 prob.cfg.noise_psd_w_per_hz, iters=iters)
+    bw = np.where(payload <= 0.0, 0.0, bw)
+    return np.where((payload > 0.0) & (slack <= 0.0), np.inf, bw)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: alternating optimization
+# ---------------------------------------------------------------------------
+
+def _finish(prob: TradeoffProblem, bandwidth: np.ndarray, prune: np.ndarray,
+            deadline: float, iterations: int) -> TradeoffSolution:
+    feasible = bool(np.all(np.isfinite(bandwidth))
+                    and np.sum(bandwidth) <= prob.cfg.bandwidth_hz * (1 + 1e-6))
+    return TradeoffSolution(
+        prune=prune, bandwidth=bandwidth, deadline=deadline,
+        inner_cost=prob.inner_cost(deadline, bandwidth, prune),
+        total_cost=prob.total_cost(bandwidth, prune),
+        per=prob.per(bandwidth), iterations=iterations, feasible=feasible)
+
+
+def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
+                      rtol: float = 1e-8) -> TradeoffSolution:
+    """Algorithm 1: equal-split init, then alternate Prop.1 / Eq.(21)."""
+    bandwidth = np.full(prob.num_clients,
+                        prob.cfg.bandwidth_hz / prob.num_clients)
+    prev_cost = np.inf
+    deadline, prune = solve_pruning(prob, bandwidth)
+    for it in range(1, max_iters + 1):
+        deadline, prune = solve_pruning(prob, bandwidth)
+        bandwidth = solve_bandwidth(prob, prune, deadline)
+        cost = prob.inner_cost(deadline, bandwidth, prune)
+        if abs(prev_cost - cost) <= rtol * max(abs(cost), 1.0):
+            return _finish(prob, bandwidth, prune, deadline, it)
+        prev_cost = cost
+    return _finish(prob, bandwidth, prune, deadline, max_iters)
+
+
+# ---------------------------------------------------------------------------
+# Benchmarks (paper §V)
+# ---------------------------------------------------------------------------
+
+def solve_gba(prob: TradeoffProblem) -> TradeoffSolution:
+    """Greedy bandwidth allocation: B_i proportional to 1/h_i^u, then the
+    pruning sub-problem is solved for that fixed allocation."""
+    inv = 1.0 / np.asarray(prob.h_up, dtype=np.float64)
+    bandwidth = prob.cfg.bandwidth_hz * inv / inv.sum()
+    deadline, prune = solve_pruning(prob, bandwidth)
+    return _finish(prob, bandwidth, prune, deadline, 1)
+
+
+def solve_fpr(prob: TradeoffProblem, prune_rate: float,
+              num_grid: int = 256) -> TradeoffSolution:
+    """Fixed pruning rate rho_i = const; the deadline is chosen by a 1-D
+    scan (the pruning closed form no longer applies) and bandwidth by
+    Eq. (21) bisection."""
+    prune = np.minimum(np.full(prob.num_clients, prune_rate), prob.max_prune)
+    t_c = prob.compute_latency(prune)
+    # Deadline range: compute-only latency .. latency at equal-split bandwidth
+    eq_bw = np.full(prob.num_clients, prob.cfg.bandwidth_hz / prob.num_clients)
+    r_eq = prob.uplink_rates(eq_bw)
+    t_hi = float(np.max(t_c + upload_latency(prob.cfg, prune, r_eq))) * 4.0
+    t_lo = float(np.max(t_c)) * (1.0 + 1e-9) + 1e-12
+    best, best_cost = None, np.inf
+    for deadline in np.linspace(t_lo, t_hi, num_grid):
+        bandwidth = solve_bandwidth(prob, prune, float(deadline))
+        if not np.all(np.isfinite(bandwidth)):
+            continue
+        if np.sum(bandwidth) > prob.cfg.bandwidth_hz:
+            continue
+        cost = prob.inner_cost(float(deadline), bandwidth, prune)
+        if cost < best_cost:
+            best, best_cost = (float(deadline), bandwidth), cost
+    if best is None:  # no feasible deadline in range: spend everything
+        deadline = t_hi
+        bandwidth = solve_bandwidth(prob, prune, deadline)
+        return _finish(prob, bandwidth, prune, deadline, num_grid)
+    return _finish(prob, best[1], prune, best[0], num_grid)
+
+
+def _grid_eval(prob: TradeoffProblem, combos: np.ndarray,
+               deadlines: np.ndarray):
+    """Evaluate cost (14a) on a (combos x deadlines) lattice; returns
+    (cost matrix, bandwidth tensor)."""
+    c, n = combos.shape
+    t = deadlines.size
+    prune = np.broadcast_to(combos[:, None, :], (c, t, n))
+    dl = np.broadcast_to(deadlines[None, :, None], (c, t, n))
+    bw = solve_bandwidth(prob, prune, dl, iters=50)
+    feasible = np.all(np.isfinite(bw), axis=-1) & \
+        (np.sum(np.where(np.isfinite(bw), bw, 0.0), axis=-1)
+         <= prob.cfg.bandwidth_hz)
+    q = prob.per(np.where(np.isfinite(bw), bw, 0.0))
+    k = np.asarray(prob.num_samples, dtype=np.float64)
+    learning = prob.bound.m * np.sum(k * (q + k * prune), axis=-1)
+    cost = (1.0 - prob.weight) * deadlines[None, :] + prob.weight * learning
+    return np.where(feasible, cost, np.inf), bw
+
+
+def solve_exhaustive(prob: TradeoffProblem, rho_grid: int = 6,
+                     deadline_grid: int = 32, refine: int = 4) -> TradeoffSolution:
+    """Exhaustive search (exponential, the paper's oracle benchmark).
+
+    Enumerates every per-client pruning-rate combination on a ``rho_grid``
+    lattice (rho_grid^I combos) crossed with a dense deadline grid; for
+    each (rho, t~) the minimum bandwidth comes from Eq. (21).  Fully
+    vectorised (bisection on a (combos, deadlines, clients) tensor), then
+    ``refine`` rounds shrink the lattice around the incumbent so the
+    answer approaches the continuum optimum.
+    """
+    n = prob.num_clients
+    if rho_grid ** n > 100_000:  # exponential blow-up guard
+        rho_grid = max(2, int(100_000 ** (1.0 / n)))
+
+    # deadline range: fastest possible compute .. generous no-pruning upper
+    eq_bw = np.full(n, prob.cfg.bandwidth_hz / n)
+    t_np = prob.no_prune_latency(eq_bw)
+    finite = t_np[np.isfinite(t_np)]
+    if finite.size == 0:
+        return _finish(prob, eq_bw, np.ones(n), np.inf, 0)
+    t_lo = float(np.max(prob.compute_latency(prob.max_prune))) * (1 + 1e-9) + 1e-12
+    t_hi = float(np.max(finite)) * 4.0
+
+    lo_rho = np.zeros(n)
+    hi_rho = np.asarray(prob.max_prune, dtype=np.float64).copy()
+    evals = 0
+    best = None
+    for _ in range(max(refine, 1)):
+        axes = [np.linspace(lo_rho[i], hi_rho[i], rho_grid) for i in range(n)]
+        combos = np.stack(np.meshgrid(*axes, indexing="ij"), -1).reshape(-1, n)
+        deadlines = np.geomspace(max(t_lo, 1e-12), t_hi, deadline_grid)
+        cost, bw = _grid_eval(prob, combos, deadlines)
+        evals += cost.size
+        ci, ti = np.unravel_index(int(np.argmin(cost)), cost.shape)
+        if not np.isfinite(cost[ci, ti]):
+            break
+        best = (bw[ci, ti], combos[ci], float(deadlines[ti]))
+        # shrink the lattice around the incumbent
+        step = (hi_rho - lo_rho) / (rho_grid - 1)
+        lo_rho = np.clip(combos[ci] - step, 0.0, prob.max_prune)
+        hi_rho = np.clip(combos[ci] + step, 0.0, prob.max_prune)
+        ratio = (t_hi / t_lo) ** (1.0 / (deadline_grid - 1))
+        t_lo_new = deadlines[ti] / ratio
+        t_hi = deadlines[ti] * ratio
+        t_lo = max(t_lo, t_lo_new)
+    if best is None:
+        return solve_alternating(prob)
+    return _finish(prob, best[0], best[1], best[2], evals)
+
+
+def solve_ideal(prob: TradeoffProblem) -> TradeoffSolution:
+    """Ideal FL: no pruning, zero packet error (upper reference for accuracy).
+
+    Bandwidth minimizes the round latency alone (equalizing waterfill via
+    the same bisection machinery at the latency-optimal deadline)."""
+    prune = np.zeros(prob.num_clients)
+    # binary search on deadline: smallest t~ whose min-bandwidth fits B
+    t_c = prob.compute_latency(prune)
+    lo = float(np.max(t_c)) * (1.0 + 1e-9) + 1e-12
+    hi = lo * 2.0 + 1.0
+    while True:
+        bw = solve_bandwidth(prob, prune, hi)
+        if np.all(np.isfinite(bw)) and np.sum(bw) <= prob.cfg.bandwidth_hz:
+            break
+        hi *= 2.0
+        if hi > 1e9:
+            break
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        bw = solve_bandwidth(prob, prune, mid)
+        if np.all(np.isfinite(bw)) and np.sum(bw) <= prob.cfg.bandwidth_hz:
+            hi = mid
+        else:
+            lo = mid
+    bandwidth = solve_bandwidth(prob, prune, hi)
+    sol = _finish(prob, bandwidth, prune, hi, 1)
+    sol.per = np.zeros(prob.num_clients)  # ideal: error-free channel
+    return sol

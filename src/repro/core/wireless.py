@@ -1,0 +1,185 @@
+"""Wireless channel + latency model of the pruned-FL system (paper §II).
+
+Implements Eqs. (1)-(4) and the packet-error-rate model verbatim:
+
+  R_i^d = B      * log2(1 + p^d h_i^d / (B   N0))          (1)
+  t^d   = max_i D_M / R_i^d
+  t_i^c = (1 - rho_i) K_i d^c / f_i                        (2)
+  R_i^u = B_i    * log2(1 + p_i h_i^u / (B_i N0))          (3)
+  t_i^u = (1 - rho_i) D_M / R_i^u
+  t     = max_i { t^d + t_i^c + t_i^u + t^a }              (4)
+  q_i   = 1 - exp(-m0 B_i N0 / (p_i h_i^u))                (waterfall PER [11])
+
+All quantities are SI (Hz, W, s, bits).  The module is pure numpy/python —
+it is the host-side substrate that the trade-off optimizer consumes; no
+device state is touched.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+__all__ = [
+    "WirelessConfig",
+    "ClientRadio",
+    "Channel",
+    "downlink_rate",
+    "uplink_rate",
+    "packet_error_rate",
+    "broadcast_latency",
+    "training_latency",
+    "upload_latency",
+    "round_latency",
+    "dbm_to_watt",
+    "db_to_linear",
+]
+
+
+def dbm_to_watt(dbm: float) -> float:
+    return 10.0 ** (dbm / 10.0) * 1e-3
+
+
+def db_to_linear(db: float) -> float:
+    return 10.0 ** (db / 10.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """System-wide wireless parameters (paper Table I defaults)."""
+
+    bandwidth_hz: float = 15e6              # B  (total uplink bandwidth)
+    noise_psd_w_per_hz: float = dbm_to_watt(-174.0)   # N0
+    tx_power_ue_w: float = dbm_to_watt(23.0)          # p_i (max UE power)
+    tx_power_bs_w: float = 1.0                        # p^d (BS broadcast, 30 dBm)
+    waterfall_m0: float = db_to_linear(0.023)         # m0 (waterfall threshold)
+    model_bits: float = 1.6e6               # D_M
+    cycles_per_sample: float = 0.168e9      # d^c
+    aggregation_latency_s: float = 1e-3     # t^a (constant)
+
+    def replace(self, **kw) -> "WirelessConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClientRadio:
+    """Per-UE radio/compute profile."""
+
+    uplink_gain: float          # h_i^u (linear power gain)
+    downlink_gain: float        # h_i^d
+    cpu_hz: float               # f_i
+    num_samples: int            # K_i (samples used for local training)
+    tx_power_w: float           # p_i
+    max_prune_rate: float = 0.7  # rho_i^max
+
+
+class Channel:
+    """Seeded block-fading channel generator.
+
+    Path loss follows the common urban model 128.1 + 37.6 log10(d_km) dB
+    with i.i.d. Rayleigh small-scale fading per round; clients are dropped
+    uniformly in an annulus around the BS.  Everything is reproducible
+    from ``seed``.
+    """
+
+    def __init__(
+        self,
+        num_clients: int,
+        seed: int = 0,
+        min_dist_m: float = 50.0,
+        max_dist_m: float = 500.0,
+    ):
+        self.num_clients = int(num_clients)
+        self.rng = np.random.default_rng(seed)
+        self.dist_m = self.rng.uniform(min_dist_m, max_dist_m, size=self.num_clients)
+
+    def path_loss_linear(self) -> np.ndarray:
+        pl_db = 128.1 + 37.6 * np.log10(self.dist_m / 1000.0)
+        return 10.0 ** (-pl_db / 10.0)
+
+    def sample_gains(self) -> tuple[np.ndarray, np.ndarray]:
+        """One round of (uplink, downlink) channel power gains."""
+        pl = self.path_loss_linear()
+        ray_u = self.rng.exponential(1.0, size=self.num_clients)
+        ray_d = self.rng.exponential(1.0, size=self.num_clients)
+        return pl * ray_u, pl * ray_d
+
+
+# ---------------------------------------------------------------------------
+# Rates / PER / latency terms — vectorised over clients.
+# ---------------------------------------------------------------------------
+
+def downlink_rate(cfg: WirelessConfig, h_down: np.ndarray) -> np.ndarray:
+    """Eq. (1): broadcast uses the full bandwidth B."""
+    b = cfg.bandwidth_hz
+    snr = cfg.tx_power_bs_w * np.asarray(h_down) / (b * cfg.noise_psd_w_per_hz)
+    return b * np.log2(1.0 + snr)
+
+
+def uplink_rate(bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
+                noise_psd: float) -> np.ndarray:
+    """Eq. (3): FDMA uplink rate for allocated bandwidth B_i.
+
+    Returns 0 for B_i == 0 (the limit of B log2(1+c/B) as B->0 is 0).
+    """
+    b = np.asarray(bandwidth, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        snr = np.asarray(tx_power) * np.asarray(h_up) / (b * noise_psd)
+        r = b * np.log2(1.0 + snr)
+    return np.where(b > 0.0, r, 0.0)
+
+
+def packet_error_rate(bandwidth: np.ndarray, tx_power: np.ndarray,
+                      h_up: np.ndarray, noise_psd: float, m0: float) -> np.ndarray:
+    """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)).  Increasing in B_i (Lemma 1)."""
+    b = np.asarray(bandwidth, dtype=np.float64)
+    return 1.0 - np.exp(-m0 * b * noise_psd / (np.asarray(tx_power) * np.asarray(h_up)))
+
+
+def effective_per(per: np.ndarray, retx: int) -> np.ndarray:
+    """Packet error rate with up to ``retx`` retransmissions (beyond-paper
+    ablation: the paper assumes a single packet, retx = 0).  A gradient is
+    lost only if all retx+1 attempts fail: q_eff = q^(retx+1)."""
+    return np.asarray(per, dtype=np.float64) ** (retx + 1)
+
+
+def expected_tries(per: np.ndarray, retx: int) -> np.ndarray:
+    """Expected number of uplink transmissions with up to ``retx``
+    retransmissions: sum_{i=0..retx} q^i = (1 - q^(retx+1)) / (1 - q)."""
+    q = np.asarray(per, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        tries = (1.0 - q ** (retx + 1)) / (1.0 - q)
+    return np.where(q < 1.0, tries, retx + 1.0)
+
+
+def broadcast_latency(cfg: WirelessConfig, h_down: np.ndarray) -> float:
+    """t^d = max_i D_M / R_i^d — limited by the worst downlink."""
+    rates = downlink_rate(cfg, h_down)
+    return float(np.max(cfg.model_bits / rates))
+
+
+def training_latency(cfg: WirelessConfig, prune_rate: np.ndarray,
+                     num_samples: np.ndarray, cpu_hz: np.ndarray) -> np.ndarray:
+    """Eq. (2): t_i^c = (1 - rho_i) K_i d^c / f_i."""
+    return (1.0 - np.asarray(prune_rate)) * np.asarray(num_samples) \
+        * cfg.cycles_per_sample / np.asarray(cpu_hz)
+
+
+def upload_latency(cfg: WirelessConfig, prune_rate: np.ndarray,
+                   rate_up: np.ndarray) -> np.ndarray:
+    """t_i^u = (1 - rho_i) D_M / R_i^u.  inf when the rate is 0."""
+    r = np.asarray(rate_up, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        t = (1.0 - np.asarray(prune_rate)) * cfg.model_bits / r
+    return np.where(r > 0.0, t, np.inf)
+
+
+def round_latency(cfg: WirelessConfig, h_down: np.ndarray, prune_rate: np.ndarray,
+                  bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
+                  num_samples: np.ndarray, cpu_hz: np.ndarray) -> float:
+    """Eq. (4): one full communication round."""
+    t_d = broadcast_latency(cfg, h_down)
+    t_c = training_latency(cfg, prune_rate, num_samples, cpu_hz)
+    r_u = uplink_rate(bandwidth, tx_power, h_up, cfg.noise_psd_w_per_hz)
+    t_u = upload_latency(cfg, prune_rate, r_u)
+    return float(np.max(t_d + t_c + t_u + cfg.aggregation_latency_s))

@@ -1,0 +1,32 @@
+"""Client-side logic: prune the broadcast model, run local FedSGD."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+from repro.core import pruning
+
+PyTree = Any
+
+
+def local_gradient(loss_fn: Callable[[PyTree], jax.Array], params: PyTree,
+                   masks: PyTree) -> tuple[jax.Array, PyTree]:
+    """One FedSGD step on the pruned model W~ = W * M.
+
+    Returns (loss, masked gradient): gradients of pruned coordinates are
+    zeroed — a pruned weight is absent on the UE, so it cannot contribute
+    to the uploaded gradient packet.
+    """
+    pruned = pruning.apply_masks(params, masks)
+    loss, grads = jax.value_and_grad(loss_fn)(pruned)
+    return loss, pruning.apply_masks(grads, masks)
+
+
+def make_masks(params: PyTree, prune_rate, structured: bool = False,
+               block: int = 128) -> PyTree:
+    """Mask generator for a given pruning rate (paper: rho_i)."""
+    if structured:
+        return pruning.block_masks(params, prune_rate, block=block)
+    return pruning.magnitude_masks(params, prune_rate)

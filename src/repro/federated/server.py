@@ -1,0 +1,37 @@
+"""Server-side (BS) logic: broadcast, collect, packet-error-aware aggregate,
+and global model update (paper §II-B)."""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+PyTree = Any
+
+
+def global_round(params: PyTree,
+                 client_grad_fns: list[Callable[[PyTree], tuple[jax.Array, PyTree]]],
+                 num_samples: jnp.ndarray, per: jnp.ndarray,
+                 key: jax.Array, lr: float
+                 ) -> tuple[PyTree, jnp.ndarray, jnp.ndarray]:
+    """One synchronous FL round.
+
+    client_grad_fns: one callable per UE mapping the *global* params to
+    (local loss, uploaded gradient) — pruning happens inside (client.py).
+    Returns (new params, arrivals C_i, mean local loss).
+    """
+    losses, grads = [], []
+    for fn in client_grad_fns:
+        loss, g = fn(params)
+        losses.append(loss)
+        grads.append(g)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+    arrivals = aggregation.sample_arrivals(key, per)
+    g_global = aggregation.aggregate(stacked, num_samples, arrivals)
+    new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                              params, g_global)
+    return new_params, arrivals, jnp.mean(jnp.stack(losses))

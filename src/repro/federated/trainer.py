@@ -1,0 +1,126 @@
+"""Distributed pruned-FL train step (the paper's technique as a
+first-class mesh feature).
+
+Clients map onto the mesh's client axes (("data",) single-pod,
+("pod","data") multi-pod): each index along those axes hosts one UE/client
+shard.  Per step, every client
+
+  1. derives its own pruning mask from its rho_i (block-structured
+     magnitude pruning, computed on the fly — no per-client mask storage),
+  2. computes the masked gradient of the masked model on its local batch,
+  3. contributes K_i * C_i * grad to a single weighted psum implementing
+     the BS aggregation rule Eq. (5),
+
+and the global SGD update replays identically on all shards.  Model
+parameters are replicated across client axes (the paper's UEs hold the
+full model — it is the *pruned* copy that is cheap), matching FedSGD
+semantics exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # JAX >= 0.6 exposes shard_map at top level
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map  # type: ignore
+
+from repro.core import aggregation, pruning
+from repro.models import model as M
+
+PyTree = Any
+
+
+def num_clients(mesh: Mesh, client_axes: tuple[str, ...]) -> int:
+    n = 1
+    for a in client_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_fl_train_step(cfg, mesh: Mesh,
+                       client_axes: tuple[str, ...] = ("data",),
+                       block: int = 128, lr: float = 1e-2,
+                       tp_shard_params: bool = True):
+    """Build the jitted distributed FL train step for an ArchConfig model.
+
+    Signature of the returned fn:
+        (params, batch, rho, arrivals, k) -> (params, metrics)
+      batch["tokens"]: (num_clients * per_client_batch, seq) sharded over
+      client axes; rho/arrivals/k: (num_clients,) host-computed by the
+      trade-off optimizer + channel simulation.
+
+    tp_shard_params: every client holds the full model *semantically*
+    (FedSGD), but within a client the weights shard over the Auto tensor
+    axis — set via the outer jit's in_shardings, since shard_map in_specs
+    may only name the manual client axes.
+    """
+    caxes = client_axes if len(client_axes) > 1 else client_axes[0]
+
+    def step(params, batch, rho, arrivals, k):
+        # inside shard_map: params replicated; batch/rho/... are this
+        # client's slice
+        rho_i = rho[0]
+        c_i = arrivals[0]
+        k_i = k[0]
+
+        masks = pruning.block_masks(params, rho_i, block=block)
+
+        def loss_fn(p):
+            total, _ = M.loss_fn(cfg, pruning.apply_masks(p, masks), batch)
+            return total
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = pruning.apply_masks(grads, masks)
+        g = aggregation.psum_aggregate(grads, k_i, c_i, client_axes)
+        new_params = jax.tree.map(lambda p, gg: p - lr * gg.astype(p.dtype),
+                                  params, g)
+        mean_loss = jax.lax.pmean(loss, client_axes)
+        achieved = pruning.achieved_rate(params, masks).reshape(1)
+        return new_params, {"loss": mean_loss, "achieved_rho": achieved}
+
+    # Hybrid manual/auto: the client axes are Manual (explicit psum for the
+    # Eq. (5) aggregation), every other mesh axis (the tensor axis) stays
+    # Auto so the per-client model computation is partitioned across it by
+    # GSPMD + the model's logical sharding constraints.
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(P(), {"tokens": P(caxes)}, P(caxes), P(caxes), P(caxes)),
+        out_specs=(P(), {"loss": P(), "achieved_rho": P(caxes)}),
+        axis_names=set(client_axes),
+        check_vma=False)
+
+    if tp_shard_params and "model" in mesh.axis_names \
+            and mesh.shape["model"] > 1:
+        import functools
+        from repro.launch import shardings as SH
+        params_shape = jax.eval_shape(
+            functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+        p_shard = SH.param_shardings(params_shape, mesh, fsdp=False)
+        cshard = NamedSharding(mesh, P(caxes))
+        return jax.jit(mapped,
+                       in_shardings=(p_shard, {"tokens": cshard}, cshard,
+                                     cshard, cshard),
+                       out_shardings=(p_shard, None))
+    return jax.jit(mapped)
+
+
+def fl_input_specs(cfg, mesh: Mesh, client_axes: tuple[str, ...],
+                   per_client_batch: int, seq_len: int):
+    """ShapeDtypeStructs + shardings for the FL dry-run."""
+    n = num_clients(mesh, client_axes)
+    caxes = client_axes if len(client_axes) > 1 else client_axes[0]
+    batch = {"tokens": jax.ShapeDtypeStruct((n * per_client_batch, seq_len),
+                                            jnp.int32)}
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    shardings = (
+        jax.tree.map(lambda _: NamedSharding(mesh, P()), {"dummy": 0}),
+    )
+    del shardings
+    return batch, vec

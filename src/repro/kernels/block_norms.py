@@ -1,0 +1,38 @@
+"""Pallas TPU kernel: per-tile squared L2 norms (mask generation input).
+
+Reduces each (block_k x block_n) weight tile to one float32 — the ranking
+statistic for block-structured magnitude pruning.  Grid: one step per
+tile; the reduction runs on the VPU entirely out of VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(w_ref, o_ref):
+    t = w_ref[...].astype(jnp.float32)
+    o_ref[0, 0] = jnp.sum(t * t)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_k", "block_n", "interpret"))
+def block_norms(w: jnp.ndarray, block_k: int = 128, block_n: int = 128,
+                interpret: bool = True) -> jnp.ndarray:
+    """w: (K, N) with K % block_k == 0 and N % block_n == 0 (ops.py pads).
+    Returns (K//block_k, N//block_n) float32 squared norms."""
+    k, n = w.shape
+    grid = (k // block_k, n // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_k, block_n), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k // block_k, n // block_n),
+                                       jnp.float32),
+        interpret=interpret,
+    )(w)

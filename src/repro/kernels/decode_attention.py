@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: one-token GQA decode attention (flash-decode style).
+
+Computes attention for a single new token against a length-S KV cache with
+optional sliding window, tiled over KV blocks with an online softmax: the
+running (max, denominator, accumulator) live in VMEM scratch across the
+sequential S-block sweep — the cache streams HBM->VMEM once, the classic
+memory-bound decode pattern.
+
+Grid: (B, Hkv, S/bs).  Each step handles the G = H/Hkv query heads of one
+KV head so K/V blocks are fetched once per group (GQA's bandwidth win is
+explicit in the tiling).  The per-batch valid length ``pos`` rides in
+scalar prefetch (SMEM) and prunes masked blocks' compute via @pl.when.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, n_s: int, window, scale: float):
+    b = pl.program_id(0)
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    blk_lo = s_idx * block_s
+    # block-level skip: no valid key in this block -> no compute at all
+    lo_ok = blk_lo <= pos
+    hi_ok = True if window is None else (blk_lo + block_s - 1) > (pos - window)
+
+    @pl.when(jnp.logical_and(lo_ok, hi_ok))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        kpos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
+        valid = kpos <= pos
+        if window is not None:
+            valid = jnp.logical_and(valid, kpos > pos - window)
+        scores = jnp.where(valid, scores, _NEG)              # (G, bs)
+
+        m_prev = m_ref[...]                                  # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                          # (G, bs)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(s_idx == n_s - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "window", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     pos: jnp.ndarray, block_s: int = 512,
+                     window: int | None = None,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: (B, H, hd); k, v: (B, S, Hkv, hd); pos: (B,) int32.
+    Returns (B, H, hd) float32.  S % block_s == 0 (ops.py pads)."""
+    b, h, hd = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    n_s = s // block_s
+    scale = hd ** -0.5
+    qg = q.reshape(b, hkv, g, hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, n_s=n_s, window=window,
+                          scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, n_s),
+            in_specs=[
+                pl.BlockSpec((1, 1, g, hd), lambda b_, h_, s_, *_: (b_, h_, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b_, h_, s_, *_: (b_, s_, h_, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b_, h_, s_, *_: (b_, s_, h_, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, hd),
+                                   lambda b_, h_, s_, *_: (b_, h_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, h, hd)

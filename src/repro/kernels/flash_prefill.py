@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: full-sequence GQA flash attention (prefill/train).
+
+This is the fused kernel EXPERIMENTS.md §Roofline calls for: the pure-JAX
+chunked path (models/attention.flash_attention) is what the SPMD dry-run
+lowers — correct and shardable — but XLA materializes its per-chunk score
+blocks in HBM.  Here the (block_q x block_s) score/probability tiles
+live entirely in VMEM scratch: HBM traffic drops to the q/k/v/o stream,
+which is the roofline floor for attention.
+
+Grid: (B, Hkv, S/block_q, T/block_s) — the KV sweep is the innermost
+(sequential) axis, so the online-softmax state (m, l, acc) persists in
+VMEM scratch across it (same convention as decode_attention.py).  All
+G = H/Hkv query heads of one KV head share each fetched K/V block.
+
+Causality prunes whole (q, k) block pairs via @pl.when before any MXU
+work; sliding windows prune from the other side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_s: int, n_k: int, causal: bool,
+            window, t_valid: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * block_q
+    k_lo = ki * block_s
+    # block-level pruning: causal -> skip blocks fully above the diagonal;
+    # window -> skip blocks fully left of the window; ragged T -> skip
+    # blocks past the valid key length
+    live = k_lo < t_valid
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_lo + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(
+            live, k_lo + block_s - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        g, hd = q_ref.shape[3], q_ref.shape[4]
+        q = q_ref[0, :, 0].astype(jnp.float32)               # (bq, G, hd)
+        q = q.reshape(block_q * g, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+        scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_q * g, block_s), 0)
+        qpos = q_lo + rows // g
+        kpos = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q * g, block_s), 1)
+        valid = kpos < t_valid
+        if causal:
+            valid = jnp.logical_and(valid, kpos <= qpos)
+        if window is not None:
+            valid = jnp.logical_and(valid, kpos > qpos - window)
+        scores = jnp.where(valid, scores, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + \
+            jnp.dot(p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        g, hd = q_ref.shape[3], q_ref.shape[4]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0] = out.reshape(block_q, g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_q", "block_s", "causal", "window", "t_valid", "interpret"))
+def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  block_q: int = 256, block_s: int = 512,
+                  causal: bool = True, window: int | None = None,
+                  t_valid: int | None = None,
+                  interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, hd); k, v: (B, T, Hkv, hd).  Returns (B, S, H, hd)
+    float32.  S % block_q == 0 and T % block_s == 0 (ops.py pads);
+    ``t_valid`` masks padded keys (defaults to T)."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    n_q, n_k = s // block_q, t // block_s
+    t_valid = t if t_valid is None else t_valid
+    scale = hd ** -0.5
+    qg = q.reshape(b, s, hkv, g, hd)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_q=block_q, block_s=block_s,
+                          n_k=n_k, causal=causal, window=window,
+                          t_valid=t_valid, scale=scale),
+        grid=(b, hkv, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, g, hd),
+                         lambda b_, h_, q_, k_: (b_, q_, h_, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b_, h_, q_, k_: (b_, k_, h_, 0)),
+            pl.BlockSpec((1, block_s, 1, hd),
+                         lambda b_, h_, q_, k_: (b_, k_, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, g, hd),
+                               lambda b_, h_, q_, k_: (b_, q_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, 1), jnp.float32),
+            pltpu.VMEM((block_q * g, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b, s, hkv, g, hd), jnp.float32),
+        interpret=interpret,
+    )(qg, k, v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,98 @@
+"""Public jit'd wrappers for the Pallas kernels: padding, dtype handling,
+and automatic interpret-mode selection (interpret=True off-TPU so the
+kernel bodies execute on CPU for validation)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import block_norms as _bn
+from repro.kernels import block_sparse_matmul as _bsm
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import ref
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, mults)]
+    if any(p for _, p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def masked_matmul(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray,
+                  block_m: int = 128, block_k: int = 128, block_n: int = 128,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """y = x @ (w ⊙ blockmask); arbitrary (batched) x, auto padding.
+
+    x: (..., K), w: (K, N), mask: (ceil(K/bk), ceil(N/bn)).
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w.shape[1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    x2 = _pad_to(x2, (bm, block_k))
+    w2 = _pad_to(w, (block_k, block_n))
+    y = _bsm.block_sparse_matmul(x2, w2, mask, bm, block_k, block_n,
+                                 interpret=interpret)
+    return y[:m, :n].reshape(*lead, n)
+
+
+def tile_norms(w: jnp.ndarray, block_k: int = 128, block_n: int = 128,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Per-tile squared L2 norms with auto padding; w: (K, N)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    w2 = _pad_to(w, (block_k, block_n))
+    return _bn.block_norms(w2, block_k, block_n, interpret=interpret)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, block_s: int = 512,
+                 window: int | None = None,
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """One-token GQA decode; pads the cache length to a block multiple.
+    q: (B, H, hd), k/v: (B, S, Hkv, hd), pos: (B,)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s = k.shape[1]
+    block_s = min(block_s, max(128, 1 << (s - 1).bit_length()))
+    if s % block_s:
+        k = _pad_to(k, (1, block_s, 1, 1))
+        v = _pad_to(v, (1, block_s, 1, 1))
+    return _da.decode_attention(q, k, v, pos, block_s=block_s, window=window,
+                                interpret=interpret)
+
+
+def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, window: int | None = None,
+                  block_q: int = 256, block_s: int = 512,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Full-sequence GQA flash attention with auto padding.
+    q: (B, S, H, hd), k/v: (B, T, Hkv, hd) -> (B, S, H, hd) f32."""
+    interpret = _interpret_default() if interpret is None else interpret
+    s, t = q.shape[1], k.shape[1]
+    block_q = min(block_q, max(16, 1 << (s - 1).bit_length()))
+    block_s = min(block_s, max(16, 1 << (t - 1).bit_length()))
+    qp = _pad_to(q, (1, block_q, 1, 1))
+    kp = _pad_to(k, (1, block_s, 1, 1))
+    vp = _pad_to(v, (1, block_s, 1, 1))
+    out = _fp.flash_prefill(qp, kp, vp, block_q=block_q, block_s=block_s,
+                            causal=causal, window=window, t_valid=t,
+                            interpret=interpret)
+    return out[:, :s]
+
+
+# re-export oracles for tests/benchmarks
+oracle_masked_matmul = ref.block_sparse_matmul
+oracle_tile_norms = ref.block_norms
+oracle_flash_decode = ref.decode_attention
+oracle_flash_prefill = ref.prefill_attention

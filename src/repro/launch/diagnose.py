@@ -1,0 +1,94 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Dry-run profiler: per-computation cost breakdown + biggest tensors +
+collective inventory for one (arch x shape x mesh) combo.  This is the
+"profile" for §Perf iterations — reasoned from the lowered IR, since the
+container has no real TPU.
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch smollm-135m --shape prefill_32k
+"""
+
+import argparse
+import sys
+from collections import Counter
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch import hlo_cost as HC
+from repro.launch import mesh as MESH
+from repro.launch import steps as ST
+from repro.models import sharding as MS
+
+
+def compile_combo(arch: str, shape_name: str, multi_pod: bool = False,
+                  fl: bool = False, rules: dict | None = None):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    use = dict(MS.DEFAULT_RULES)
+    if rules:
+        use.update(rules)
+    with mesh, MS.use_rules(use, mesh):
+        if fl:
+            from repro.launch.dryrun import _fl_spec
+            spec = _fl_spec(cfg, shape, mesh)
+        else:
+            spec = ST.input_specs(cfg, shape, mesh)
+        jitted = jax.jit(spec["step"], in_shardings=spec["in_shardings"],
+                         out_shardings=spec["out_shardings"])
+        compiled = jitted.lower(*spec["args"]).compile()
+    return compiled, mesh
+
+
+def breakdown(hlo_text: str, default_group: int, top: int = 15) -> None:
+    comps, entry = HC.parse_computations(hlo_text)
+    memo: dict = {}
+    total = HC._comp_cost(comps[entry], comps, memo, default_group)
+    print(f"\nTOTAL per chip: {total.flops/1e12:.2f} TF, "
+          f"{total.hbm_bytes/1e9:.1f} GB HBM, "
+          f"{total.collective_bytes/1e9:.2f} GB ICI")
+    print(f"\n-- top {top} computations by HBM bytes "
+          f"(per single execution of that computation) --")
+    rows = sorted(((c.hbm_bytes, c.flops, n) for n, c in memo.items()),
+                  reverse=True)[:top]
+    print(f"{'computation':58s} {'GB':>9s} {'GF':>10s}")
+    for b, f, n in rows:
+        print(f"{n[:58]:58s} {b/1e9:9.2f} {f/1e9:10.1f}")
+
+    print(f"\n-- biggest single tensors (>=64MB) --")
+    big = Counter()
+    for n, c in comps.items():
+        for i in c.instrs:
+            bb = HC._shape_bytes(i.result_tokens)
+            if bb >= 64 * 2**20:
+                key = (bb, i.opcode,
+                       ",".join(f"{d}[{s}]" for d, s in i.result_tokens),
+                       n[:44])
+                big[key] += 1
+    for (bb, op, shp, comp), cnt in sorted(big.items(), reverse=True)[:top]:
+        print(f"  {bb/2**20:8.0f}MB x{cnt:<3d} {op:22s} {shp:34s} in {comp}")
+
+    print(f"\n-- collectives (per chip, trip-count scaled) --")
+    for op, n in sorted(total.collective_counts.items()):
+        print(f"  {op:20s} x{n:<8.0f} {total.collective_op_bytes[op]/1e9:10.2f} GB")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--fl", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args(argv)
+
+    compiled, mesh = compile_combo(args.arch, args.shape,
+                                   multi_pod=args.multi_pod, fl=args.fl)
+    breakdown(compiled.as_text(), int(mesh.devices.size), args.top)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, prove it fits, and extract roofline terms.
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count on first init, and the dry-run needs 512 host
+placeholder devices for the 2x16x16 multi-pod mesh.  Do not set that flag
+anywhere global — smoke tests and benches see 1 device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--fl]
+  ... --out benchmarks/results   # one JSON per combo for §Roofline
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.launch import hlo_cost as HC
+from repro.launch import mesh as MESH
+from repro.launch import roofline as RF
+from repro.launch import shardings as SH
+from repro.launch import steps as ST
+from repro.models import sharding as MS
+
+
+def mesh_tag(multi_pod: bool) -> str:
+    return "2x16x16" if multi_pod else "16x16"
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               fl: bool = False, verbose: bool = True,
+               sharding_overrides: dict | None = None):
+    """Lower + compile one combo; returns a RooflineReport (or None if the
+    shape is skipped for this arch, e.g. long_500k on whisper)."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not ST.shape_supported(cfg, shape):
+        if verbose:
+            print(f"SKIP {arch} x {shape_name}: unsupported "
+                  f"(full-attention arch without long-context variant)")
+        return None
+
+    mesh = MESH.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rules = dict(MS.DEFAULT_RULES)
+    if sharding_overrides:
+        rules.update(sharding_overrides)
+
+    with mesh, MS.use_rules(rules, mesh):
+        if fl:
+            spec = _fl_spec(cfg, shape, mesh)
+        else:
+            spec = ST.input_specs(cfg, shape, mesh)
+        jitted = jax.jit(spec["step"],
+                         in_shardings=spec["in_shardings"],
+                         out_shardings=spec["out_shardings"])
+        lowered = jitted.lower(*spec["args"])
+        compiled = lowered.compile()
+
+    wall = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # loop-aware counters: XLA's cost_analysis counts while bodies ONCE;
+    # hlo_cost re-derives flops/bytes/collective bytes with trip counts
+    hc = HC.hlo_cost(compiled.as_text(),
+                     default_group=int(mesh.devices.size))
+
+    params_shape = spec["args"][0]
+    n_active = RF.active_param_count(cfg, params_shape)
+
+    report = RF.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_tag(multi_pod),
+        chips=mesh.devices.size,
+        flops_per_chip=float(hc.flops),
+        bytes_per_chip=float(hc.hbm_bytes),
+        collective_bytes_per_chip=float(hc.collective_bytes),
+        peak_memory_per_chip=float(getattr(mem, "peak_memory_in_bytes", 0)
+                                   or _mem_total(mem)),
+        argument_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+        output_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+        collectives={op: {"count": float(hc.collective_counts[op]),
+                          "bytes": float(hc.collective_op_bytes[op])}
+                     for op in hc.collective_counts},
+        model_flops=RF.model_flops(cfg, shape, n_active),
+        wall_s=wall,
+        raw_xla_flops=float(cost.get("flops", 0.0)),
+        raw_xla_bytes=float(cost.get("bytes accessed", 0.0)),
+    )
+    if verbose:
+        print(f"OK   {report.row()}  ({wall:.1f}s compile)")
+    return report
+
+
+def _mem_total(mem) -> int:
+    return (getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "output_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)
+            + getattr(mem, "generated_code_size_in_bytes", 0))
+
+
+def _fl_spec(cfg, shape, mesh) -> dict:
+    """Dry-run spec for the distributed pruned-FL step (paper technique
+    on the production mesh): clients on ("pod","data"), model on "model"."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.federated import trainer as FT
+    from repro.models import model as M
+    import functools
+
+    client_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = FT.num_clients(mesh, client_axes)
+    per_client = max(shape.global_batch // n, 1)
+    step = FT.make_fl_train_step(cfg, mesh, client_axes=client_axes)
+
+    params_shape = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((n * per_client, shape.seq_len),
+                                            jnp.int32)}
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    caxes = client_axes if len(client_axes) > 1 else client_axes[0]
+    return {
+        "step": step,
+        "args": (params_shape, batch, vec, vec, vec),
+        # shard_map's jit wrapper takes shardings from in_specs
+        "in_shardings": None,
+        "out_shardings": None,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES),
+                    help="one architecture (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES),
+                    help="one input shape (default: all)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 (512 chips) instead of 16x16 (256)")
+    ap.add_argument("--fl", action="store_true",
+                    help="dry-run the distributed pruned-FL step instead "
+                         "of the plain train/serve step (train shapes only)")
+    ap.add_argument("--out", default=None,
+                    help="directory for per-combo JSON reports")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_NAMES)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    failures = []
+    n_ok = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            if args.fl and INPUT_SHAPES[shape].mode != "train":
+                continue
+            try:
+                rep = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                                 fl=args.fl)
+            except Exception as e:  # a failure here is a bug in our system
+                traceback.print_exc()
+                failures.append((arch, shape, repr(e)))
+                print(f"FAIL {arch} x {shape}: {e}")
+                continue
+            if rep is None:
+                n_skip += 1
+                continue
+            n_ok += 1
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                tag = "fl_" if args.fl else ""
+                path = os.path.join(
+                    args.out,
+                    f"{tag}{arch}_{shape}_{rep.mesh}.json".replace("/", "-"))
+                RF.save_report(rep, path)
+
+    print(f"\n{n_ok} ok, {n_skip} skipped, {len(failures)} failed "
+          f"on mesh {mesh_tag(args.multi_pod)}")
+    for arch, shape, err in failures:
+        print(f"  FAILED: {arch} x {shape}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

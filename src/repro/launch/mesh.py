@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                     # 256 chips (TPU v5e pod)
+MULTI_POD = (2, 16, 16)                   # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def required_devices(multi_pod: bool) -> int:
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    n = 1
+    for s in shape:
+        n *= s
+    return n

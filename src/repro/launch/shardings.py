@@ -1,0 +1,156 @@
+"""Sharding inference for the production mesh (DESIGN.md §6).
+
+Parameters get 2-D "fsdp x tensor" sharding: of the last two dims, the
+penultimate shards over "data" and the last over "model" (when divisible);
+embeddings shard (vocab -> "model", d_model -> "data").  Activations,
+batches and caches go through ``data_pspec``: the batch dim shards over
+the client axes ("pod","data"), then the largest remaining dim takes
+"model" (KV-cache sequence or head dims), then leftover axes greedily.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def client_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_pspec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                fsdp: bool = True) -> P:
+    """fsdp=False (serving): weights shard over "model" only — no per-layer
+    weight all-gathers; use when params fit per chip without the data axis."""
+    data = _axis_size(mesh, "data") if fsdp else 1
+    model = _axis_size(mesh, "model")
+    spec: list = [None] * len(shape)
+    if "embedding" in path and len(shape) == 2:
+        v, d = shape
+        spec[0] = "model" if v % model == 0 else None
+        spec[1] = "data" if (fsdp and d % data == 0 and data > 1) else None
+        return P(*spec)
+    if len(shape) >= 4 and shape[1] % model == 0 and shape[1] >= model:
+        # (layers, experts, d_in, d_ff) — expert parallelism: experts over
+        # "model" (each chip owns E/model experts whole), fsdp on the
+        # larger weight dim.  Falls through to the Megatron rule when the
+        # expert count doesn't divide the tensor axis (grok: 8 experts).
+        spec[1] = "model"
+        a, b = shape[-2], shape[-1]
+        big = -2 if a >= b else -1
+        if fsdp and shape[big] % data == 0 and shape[big] >= 2 * data \
+                and data > 1:
+            spec[big] = "data"
+        return P(*spec)
+    if len(shape) >= 2:
+        a, b = shape[-2], shape[-1]
+        # Megatron alignment: the larger of the last two dims is the
+        # ff/expanded dim — shard it over "model" so column-parallel
+        # (w_in) and row-parallel (w_out) contractions both keep the
+        # tensor axis on the ff dim; the other dim shards over "data"
+        # (fsdp).  Ties (square attn projections) keep (data, model).
+        if a > b:
+            if a % model == 0 and a >= 2 * model:
+                spec[-2] = "model"
+            if b % data == 0 and b >= 2 * data and data > 1:
+                spec[-1] = "data"
+        else:
+            if a % data == 0 and a >= 2 * data and data > 1:
+                spec[-2] = "data"
+            if b % model == 0 and b >= 2 * model:
+                spec[-1] = "model"
+    return P(*spec)
+
+
+def data_pspec(shape: tuple[int, ...], mesh: Mesh,
+               batch_dim: int | None = 0) -> P:
+    caxes = client_axes(mesh)
+    csize = int(np.prod([mesh.shape[a] for a in caxes])) if caxes else 1
+    model = _axis_size(mesh, "model")
+    spec: list = [None] * len(shape)
+    used_client = False
+    if batch_dim is not None and len(shape) > batch_dim:
+        b = shape[batch_dim]
+        if caxes and b % csize == 0 and b > 0 and b >= csize:
+            spec[batch_dim] = caxes if len(caxes) > 1 else caxes[0]
+            used_client = True
+        elif "data" in mesh.axis_names and b % mesh.shape["data"] == 0 \
+                and b >= mesh.shape["data"]:
+            spec[batch_dim] = "data"
+            used_client = True
+    # assign "model" to the largest remaining divisible dim
+    order = sorted((d for d in range(len(shape)) if spec[d] is None),
+                   key=lambda d: -shape[d])
+    for d in order:
+        if shape[d] % model == 0 and shape[d] >= 2 * model:
+            spec[d] = "model"
+            break
+    # if client axes unused (e.g. batch=1), give them the next largest dim
+    if not used_client and caxes:
+        for d in order:
+            if spec[d] is None and shape[d] % csize == 0 \
+                    and shape[d] >= 2 * csize:
+                spec[d] = caxes if len(caxes) > 1 else caxes[0]
+                break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(params_shape: PyTree, mesh: Mesh,
+                    fsdp: bool = True) -> PyTree:
+    """NamedShardings for a params pytree (of arrays or ShapeDtypeStructs)."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_pspec(_path_str(path), leaf.shape,
+                                               mesh, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# per-chip HBM budget for serving-mode (TP-only) weight residency
+_SERVING_HBM_BUDGET = 12 * 2**30
+
+
+def serving_fsdp_needed(params_shape: PyTree, mesh: Mesh) -> bool:
+    """True if TP-only sharding would overflow the per-chip budget (then
+    serving keeps fsdp weight sharding and pays the all-gathers)."""
+    total = sum(
+        int(np.prod(l.shape)) * jax.dtypes.canonicalize_dtype(l.dtype).itemsize
+        for l in jax.tree_util.tree_leaves(params_shape))
+    return total / max(_axis_size(mesh, "model"), 1) > _SERVING_HBM_BUDGET
+
+
+def cache_shardings(cache_shape: PyTree, mesh: Mesh) -> PyTree:
+    """NamedShardings for a decode-cache pytree.
+
+    Stacked stage leaves look like (L, B, S, h, d) / (L, B, ...states);
+    the batch dim is index 1.  The scalar "pos" (B,) uses batch_dim 0.
+    """
+    def one(path, leaf):
+        p = _path_str(path)
+        if p == "pos" or leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, data_pspec(leaf.shape, mesh, batch_dim=1))
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def batch_shardings(batch_shape: PyTree, mesh: Mesh) -> PyTree:
+    def one(leaf):
+        return NamedSharding(mesh, data_pspec(leaf.shape, mesh, batch_dim=0))
+    return jax.tree.map(one, batch_shape)
+
+
+def replicated(tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,134 @@
+"""Step functions + abstract input specs for every (arch x input-shape)
+combination — the objects the dry-run lowers and compiles.
+
+  train_4k     -> train_step(params, batch) -> (params, metrics)
+  prefill_32k  -> prefill_step(params, batch) -> last-token logits
+  decode_32k   -> serve_step(params, token, cache) -> (logits, cache)
+  long_500k    -> serve_step with the long-context window variant
+
+Note on prefill: the step computes the full forward and the last-position
+logits; writing the per-layer K/V into a cache is a pure store of already-
+computed values (no extra FLOPs, +cache_bytes DMA) and is omitted from the
+lowered step — recorded in DESIGN.md as a simplification.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+from repro.models import sharding as MS
+from repro.launch import shardings as SH
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Window override for serve steps. long_500k uses the rolling-buffer
+    variant on full-attention archs; None for native sub-quadratic."""
+    if shape.name == "long_500k":
+        return cfg.long_context_window
+    return None
+
+
+def shape_supported(cfg: ArchConfig, shape: InputShape) -> bool:
+    """whisper (enc-dec, full-attention decoder) skips long_500k."""
+    if shape.name != "long_500k":
+        return True
+    native = cfg.family in ("ssm", "hybrid")
+    return native or cfg.long_context_window is not None
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 1e-2):
+    def train_step(params, batch):
+        (total, metrics), grads = jax.value_and_grad(
+            functools.partial(M.loss_fn, cfg), has_aux=True)(params, batch)
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+        return new_params, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        x, aux = M.hidden_states(cfg, params, batch["tokens"],
+                                 batch.get("memory"))
+        logits = M._unembed(cfg, params, x[:, -1:, :])
+        return logits[:, 0, :], aux
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, window: Optional[int]):
+    def serve_step(params, token, cache):
+        return M.decode_step(cfg, params, token, cache, window=window)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct — no allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    b = shape.global_batch
+    s = shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.num_memory_tokens:
+        specs["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_memory_tokens, cfg.memory_dim_), cfg.cdtype)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    window = decode_window(cfg, shape)
+    return jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             window=window))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    """Everything the dry-run needs: step fn, abstract args, shardings."""
+    params_shape = jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+    # serving (prefill/decode): TP-only weight residency when it fits —
+    # no per-layer fsdp weight all-gathers (inference has no optimizer
+    # state to justify them); training keeps 2-D fsdp x tensor sharding
+    fsdp = shape.mode == "train" or SH.serving_fsdp_needed(params_shape, mesh)
+    p_shard = SH.param_shardings(params_shape, mesh, fsdp=fsdp)
+
+    if shape.mode == "train":
+        step = make_train_step(cfg)
+        batch = batch_specs(cfg, shape)
+        return {
+            "step": step,
+            "args": (params_shape, batch),
+            "in_shardings": (p_shard, SH.batch_shardings(batch, mesh)),
+            "out_shardings": (p_shard, SH.replicated(
+                jax.eval_shape(step, params_shape, batch)[1], mesh)),
+        }
+    if shape.mode == "prefill":
+        step = make_prefill_step(cfg)
+        batch = batch_specs(cfg, shape)
+        out_sh = jax.tree.map(
+            lambda _: None, jax.eval_shape(step, params_shape, batch))
+        return {
+            "step": step,
+            "args": (params_shape, batch),
+            "in_shardings": (p_shard, SH.batch_shardings(batch, mesh)),
+            "out_shardings": None,
+        }
+    # decode
+    window = decode_window(cfg, shape)
+    step = make_serve_step(cfg, window)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    cache = cache_specs(cfg, shape)
+    c_shard = SH.cache_shardings(cache, mesh)
+    tok_shard = SH.batch_shardings(token, mesh)
+    return {
+        "step": step,
+        "args": (params_shape, token, cache),
+        "in_shardings": (p_shard, tok_shard, c_shard),
+        "out_shardings": (None, c_shard),
+    }

@@ -1,0 +1,455 @@
+"""Attention variants: GQA (global / sliding-window / cross) and MLA.
+
+All functions are pure; KV caches are explicit pytrees.
+
+Cache conventions
+-----------------
+Full cache (decode against a pre-filled context of length S):
+    {"k": (B, S, n_kv, hd), "v": (B, S, n_kv, hd)}  — keys stored *post*-RoPE.
+Rolling (sliding-window) cache of width W:
+    same shapes with S == W; slot for absolute position p is p % W.
+MLA latent cache:
+    {"ckv": (B, S, kv_rank), "kpe": (B, S, rope_dim)}
+The absolute position of the *next* token, ``pos`` (B,) int32, travels
+beside the cache in the serving state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding as S
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Config fragments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    causal: bool = True
+    window: int | None = None        # sliding window width (tokens), or None
+    use_rope: bool = True
+    softmax_scale: float | None = None
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale if self.softmax_scale is not None \
+            else self.head_dim ** -0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class MLASpec:
+    num_heads: int
+    q_lora_rank: int
+    kv_lora_rank: int
+    nope_dim: int                    # per-head non-rotary dims
+    rope_dim: int                    # per-head rotary dims (keys share one)
+    v_head_dim: int
+    rope_theta: float = 10000.0
+    window: int | None = None
+
+    @property
+    def scale(self) -> float:
+        return (self.nope_dim + self.rope_dim) ** -0.5
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key: jax.Array, d_model: int, spec: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    make = L.dense_bias_init if spec.qkv_bias else L.dense_init
+    return {
+        "wq": make(ks[0], d_model, spec.num_heads * spec.head_dim, dtype),
+        "wk": make(ks[1], d_model, spec.num_kv_heads * spec.head_dim, dtype),
+        "wv": make(ks[2], d_model, spec.num_kv_heads * spec.head_dim, dtype),
+        "wo": L.dense_init(ks[3], spec.num_heads * spec.head_dim, d_model, dtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    return x.reshape(x.shape[:-1] + (n, x.shape[-1] // n))
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """q: (B,S,H,hd), k: (B,T,Hkv,hd) -> scores (B,S,H,T) via GQA grouping."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bskgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    return scores.reshape(b, s, h, k.shape[1])
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    b, s, h, t = probs.shape
+    hkv = v.shape[2]
+    g = h // hkv
+    pg = probs.reshape(b, s, hkv, g, t)
+    out = jnp.einsum("bskgt,btkd->bskgd", pg, v.astype(jnp.float32))
+    return out.reshape(b, s, h, v.shape[-1])
+
+
+def _mask_bias(mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, 0.0, NEG_INF)
+
+
+def attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           mask: jnp.ndarray | None, scale: float) -> jnp.ndarray:
+    """Generic masked GQA attention; mask broadcasts to (B,S,H,T)."""
+    scores = _gqa_scores(q, k, scale)
+    if mask is not None:
+        scores = scores + _mask_bias(mask)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v)
+
+
+def causal_window_mask(s: int, t: int, offset: int,
+                       window: int | None) -> jnp.ndarray:
+    """(1, S, 1, T) mask: query i (absolute offset+i) sees key j iff
+    j <= offset+i and (no window or j > offset+i-window)."""
+    qpos = offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, :, None, :]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    scale: float, causal: bool = True,
+                    window: int | None = None,
+                    q_chunk: int = 512, kv_chunk: int = 1024) -> jnp.ndarray:
+    """Memory-efficient GQA attention: double scan (query chunks x kv
+    chunks) with online softmax, so no (S x T) score tensor is ever live —
+    required for the 32k/500k input shapes.  Pure JAX; lowers to nested
+    HLO loops that XLA pipelines.
+
+    Context parallelism: the query sequence is split into P contiguous
+    stripes sharded over the "q_stripes" logical axis (the tensor axis by
+    default), so the tensor axis does useful attention work even when
+    head counts don't divide it.  Each scan step advances all P stripes
+    one chunk; k/v stay batch-sharded and are read by every stripe.
+
+    q: (B,S,H,hd), k/v: (B,T,Hkv,hd).  Assumes self-attention positions
+    (query i at absolute position i, keys at 0..T-1) with S == T.
+    """
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    g = h // hkv
+    p_stripes = S.axis_size("q_stripes")
+    if p_stripes > 1 and s % p_stripes == 0 and s >= 2 * p_stripes:
+        q_chunk = min(q_chunk, s // p_stripes)   # shrink chunks to fit P
+    else:
+        p_stripes = 1
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    while (s // p_stripes) % q_chunk:
+        q_chunk //= 2
+    t_valid = t
+    if t % kv_chunk:
+        # ragged key length (e.g. whisper's 1500 memory tokens): pad to a
+        # chunk multiple; padded keys are masked out below
+        pad = kv_chunk - t % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        t += pad
+    nq, nk = s // (p_stripes * q_chunk), t // kv_chunk
+    stripe_len = s // p_stripes
+
+    # (B, P, nq, qc, Hkv, G, hd) -> scan over nq with P parallel stripes
+    qc = q.reshape(b, p_stripes, nq, q_chunk, hkv, g, hd).astype(jnp.float32)
+    kc = k.reshape(b, nk, kv_chunk, hkv, hd).astype(jnp.float32)
+    vc = v.reshape(b, nk, kv_chunk, hkv, vd).astype(jnp.float32)
+    qc = jnp.moveaxis(qc, 2, 0)                # (nq, B, P, qc, Hkv, G, hd)
+    kc = jnp.moveaxis(kc, 1, 0)
+    vc = jnp.moveaxis(vc, 1, 0)
+    # pin the scan-carried chunk stacks: batch over the client/data axes,
+    # stripes over the tensor axis — otherwise the partitioner is free to
+    # replicate all of q/k/v on every chip (observed: 16x compute)
+    qc = S.constrain(qc, None, "batch", "q_stripes", None, "kv", None, None)
+    kc = S.constrain(kc, None, "batch", None, "kv", None)
+    vc = S.constrain(vc, None, "batch", None, "kv", None)
+
+    stripe_base = (jnp.arange(p_stripes) * stripe_len)[:, None]   # (P,1)
+
+    def q_body(_, qi_and_chunk):
+        qi, q_blk = qi_and_chunk               # q_blk: (B,P,qc,Hkv,G,hd)
+        qpos = stripe_base + qi * q_chunk + jnp.arange(q_chunk)   # (P,qc)
+
+        def kv_body(carry, kj_and_blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kj_and_blk
+            scores = jnp.einsum("bpqkgd,btkd->bpqkgt", q_blk, k_blk) * scale
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            valid = jnp.broadcast_to((kpos < t_valid)[None, None, :],
+                                     (p_stripes, q_chunk, kv_chunk))
+            if causal:
+                valid = valid & (kpos[None, None, :] <= qpos[..., None])
+            if window is not None:
+                valid = valid & (kpos[None, None, :]
+                                 > (qpos[..., None] - window))
+            scores = jnp.where(valid[None, :, :, None, None, :], scores,
+                               NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + \
+                jnp.einsum("bpqkgt,btkd->bpqkgd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = S.constrain(
+            jnp.full((b, p_stripes, q_chunk, hkv, g), NEG_INF, jnp.float32),
+            "batch", "q_stripes", None, "kv", None)
+        l0 = S.constrain(
+            jnp.zeros((b, p_stripes, q_chunk, hkv, g), jnp.float32),
+            "batch", "q_stripes", None, "kv", None)
+        a0 = S.constrain(
+            jnp.zeros((b, p_stripes, q_chunk, hkv, g, vd), jnp.float32),
+            "batch", "q_stripes", None, "kv", None, None)
+        # checkpoint per kv block as well: backward then recomputes each
+        # (q, kv) probability block instead of holding all nk of them
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    # checkpoint the q-chunk body: without it, differentiating the scan
+    # saves the (qc x kv_chunk) probability blocks of EVERY chunk pair —
+    # i.e. the full O(S^2) score tensor (observed: 22 GB loop carries on
+    # train_4k).  Recomputation restores flash's O(S) memory at ~1 extra
+    # forward of attention compute, exactly like a fused flash backward.
+    _, out = jax.lax.scan(jax.checkpoint(q_body), None, (jnp.arange(nq), qc))
+    # out: (nq, B, P, qc, Hkv, G, vd) -> (B, P, nq, qc, H, vd) -> (B, S, ...)
+    out = jnp.moveaxis(out, 0, 2).reshape(b, s, h, vd)
+    return out
+
+
+# sequences at/above this length route through flash_attention
+FLASH_THRESHOLD = 2048
+
+
+def gqa_forward(p: dict, spec: AttnSpec, x: jnp.ndarray,
+                positions: jnp.ndarray | None = None,
+                kv_x: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill).
+
+    kv_x: source for keys/values (cross-attention) — defaults to x (self).
+    """
+    b, s, _ = x.shape
+    src = x if kv_x is None else kv_x
+    q = _split_heads(L.dense(p["wq"], x), spec.num_heads)
+    k = _split_heads(L.dense(p["wk"], src), spec.num_kv_heads)
+    v = _split_heads(L.dense(p["wv"], src), spec.num_kv_heads)
+    q = S.constrain(q, "batch", "seq", "heads", None)
+    k = S.constrain(k, "batch", "seq", "kv", None)
+    v = S.constrain(v, "batch", "seq", "kv", None)
+    if spec.use_rope and kv_x is None:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q = L.apply_rope(q, positions, spec.rope_theta)
+        k = L.apply_rope(k, positions, spec.rope_theta)
+    if kv_x is None and s >= FLASH_THRESHOLD:
+        out = flash_attention(q, k, v, spec.scale, causal=spec.causal,
+                              window=spec.window)
+    elif kv_x is not None and s * src.shape[1] >= FLASH_THRESHOLD ** 2:
+        # large cross-attention (whisper: 4096 q x 1500 mem per layer
+        # materializes 3 GB score tensors on the dense path): flash with
+        # causal=False never holds the (S, T) scores
+        out = flash_attention(q, k, v, spec.scale, causal=False, window=None)
+    else:
+        mask = None
+        if spec.causal and kv_x is None:
+            mask = causal_window_mask(s, src.shape[1], 0, spec.window)
+        out = attend(q, k, v, mask, spec.scale)
+    return L.dense(p["wo"], out.reshape(b, s, -1).astype(x.dtype))
+
+
+def init_gqa_cache(spec: AttnSpec, batch: int, cache_len: int, dtype) -> dict:
+    shape = (batch, cache_len, spec.num_kv_heads, spec.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode(p: dict, spec: AttnSpec, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, d).  pos: (B,) absolute position of x.
+
+    Keys are cached post-RoPE.  For a rolling cache (cache_len == window)
+    the write slot is pos % cache_len; validity masking handles warm-up.
+    """
+    b = x.shape[0]
+    cache_len = cache["k"].shape[1]
+    q = _split_heads(L.dense(p["wq"], x), spec.num_heads)
+    k = _split_heads(L.dense(p["wk"], x), spec.num_kv_heads)
+    v = _split_heads(L.dense(p["wv"], x), spec.num_kv_heads)
+    if spec.use_rope:
+        q = L.apply_rope(q, pos[:, None], spec.rope_theta)
+        k = L.apply_rope(k, pos[:, None], spec.rope_theta)
+
+    rolling = spec.window is not None and cache_len <= spec.window
+    slot = jnp.where(rolling, pos % cache_len, jnp.minimum(pos, cache_len - 1))
+
+    def write(buf, new):
+        idx = slot[:, None, None, None]
+        onehot = (jnp.arange(cache_len)[None, :, None, None] == idx)
+        return jnp.where(onehot, new.astype(buf.dtype), buf)
+
+    new_k, new_v = write(cache["k"], k), write(cache["v"], v)
+
+    kpos = jnp.arange(cache_len)[None, :]
+    if rolling:
+        valid = kpos < jnp.minimum(pos + 1, cache_len)[:, None]
+    else:
+        valid = kpos <= pos[:, None]
+        if spec.window is not None:
+            valid &= kpos > (pos[:, None] - spec.window)
+    mask = valid[:, None, None, :]  # (B,1,1,T)
+    out = attend(q, new_k, new_v, mask, spec.scale)
+    y = L.dense(p["wo"], out.reshape(b, 1, -1).astype(x.dtype))
+    return y, {"k": new_k, "v": new_v}
+
+
+def cross_decode(p: dict, spec: AttnSpec, x: jnp.ndarray,
+                 memory_k: jnp.ndarray, memory_v: jnp.ndarray) -> jnp.ndarray:
+    """Decode-time cross-attention against precomputed (cached) memory KV."""
+    b = x.shape[0]
+    q = _split_heads(L.dense(p["wq"], x), spec.num_heads)
+    out = attend(q, memory_k, memory_v, None, spec.scale)
+    return L.dense(p["wo"], out.reshape(b, 1, -1).astype(x.dtype))
+
+
+def cross_memory(p: dict, spec: AttnSpec, memory: jnp.ndarray):
+    """Precompute cross-attention K/V from encoder/vision memory."""
+    k = _split_heads(L.dense(p["wk"], memory), spec.num_kv_heads)
+    v = _split_heads(L.dense(p["wv"], memory), spec.num_kv_heads)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key: jax.Array, d_model: int, spec: MLASpec, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    h, qr, kvr = spec.num_heads, spec.q_lora_rank, spec.kv_lora_rank
+    qd = spec.nope_dim + spec.rope_dim
+    return {
+        "wq_down": L.dense_init(ks[0], d_model, qr, dtype),
+        "q_norm": L.norm_init(qr, dtype),
+        "wq_up": L.dense_init(ks[1], qr, h * qd, dtype),
+        "wkv_down": L.dense_init(ks[2], d_model, kvr, dtype),
+        "kv_norm": L.norm_init(kvr, dtype),
+        "wk_pe": L.dense_init(ks[3], d_model, spec.rope_dim, dtype),
+        "wk_up": L.dense_init(ks[4], kvr, h * spec.nope_dim, dtype),
+        "wv_up": L.dense_init(ks[5], kvr, h * spec.v_head_dim, dtype),
+        "wo": L.dense_init(ks[6], h * spec.v_head_dim, d_model, dtype),
+    }
+
+
+def _mla_qkv(p: dict, spec: MLASpec, x: jnp.ndarray, positions: jnp.ndarray):
+    """Shared projections. Returns (q_nope, q_pe, ckv, k_pe)."""
+    b, s, _ = x.shape
+    h = spec.num_heads
+    q = L.dense(p["wq_up"], L.rms_norm(p["q_norm"], L.dense(p["wq_down"], x)))
+    q = q.reshape(b, s, h, spec.nope_dim + spec.rope_dim)
+    q_nope, q_pe = q[..., :spec.nope_dim], q[..., spec.nope_dim:]
+    q_pe = L.apply_rope(q_pe, positions, spec.rope_theta)
+    ckv = L.rms_norm(p["kv_norm"], L.dense(p["wkv_down"], x))   # (B,S,kvr)
+    k_pe = L.dense(p["wk_pe"], x)[:, :, None, :]                # (B,S,1,rope)
+    k_pe = L.apply_rope(k_pe, positions, spec.rope_theta)[:, :, 0, :]
+    return q_nope, q_pe, ckv, k_pe
+
+
+def mla_forward(p: dict, spec: MLASpec, x: jnp.ndarray,
+                positions: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Training/prefill MLA in the expanded form."""
+    b, s, _ = x.shape
+    h = spec.num_heads
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_nope, q_pe, ckv, k_pe = _mla_qkv(p, spec, x, positions)
+    k_nope = L.dense(p["wk_up"], ckv).reshape(b, s, h, spec.nope_dim)
+    v = L.dense(p["wv_up"], ckv).reshape(b, s, h, spec.v_head_dim)
+    if s >= FLASH_THRESHOLD:
+        # expanded per-head MHA routed through the chunked flash path
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe[:, :, None, :],
+                                      (b, s, h, spec.rope_dim))], axis=-1)
+        out = flash_attention(q_full, k_full, v, spec.scale, causal=True,
+                              window=spec.window)
+    else:
+        scores = (jnp.einsum("bshd,bthd->bsht", q_nope.astype(jnp.float32),
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bshd,btd->bsht", q_pe.astype(jnp.float32),
+                               k_pe.astype(jnp.float32))) * spec.scale
+        mask = causal_window_mask(s, s, 0, spec.window)  # (1,S,1,T)
+        scores = scores + _mask_bias(mask)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bsht,bthd->bshd", probs, v.astype(jnp.float32))
+    return L.dense(p["wo"], out.reshape(b, s, -1).astype(x.dtype))
+
+
+def init_mla_cache(spec: MLASpec, batch: int, cache_len: int, dtype) -> dict:
+    return {"ckv": jnp.zeros((batch, cache_len, spec.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, cache_len, spec.rope_dim), dtype)}
+
+
+def mla_decode(p: dict, spec: MLASpec, x: jnp.ndarray, cache: dict,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """One-token MLA decode in the *absorbed* form: only the latent
+    (ckv, kpe) cache is read; W_uk folds into the query and W_uv into the
+    output so per-step compute is O(S * (kv_rank + rope_dim)) per head."""
+    b = x.shape[0]
+    h = spec.num_heads
+    cache_len = cache["ckv"].shape[1]
+    q_nope, q_pe, ckv_new, kpe_new = _mla_qkv(p, spec, x, pos[:, None])
+    # absorb W_uk:  q_lat[h, kvr] = q_nope[h, nope] @ W_uk[kvr, h*nope]^T
+    wk = p["wk_up"]["w"].reshape(spec.kv_lora_rank, h, spec.nope_dim)
+    q_lat = jnp.einsum("bshd,khd->bshk", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))       # (B,1,H,kvr)
+
+    rolling = spec.window is not None and cache_len <= spec.window
+    slot = jnp.where(rolling, pos % cache_len, jnp.minimum(pos, cache_len - 1))
+
+    def write(buf, new):
+        onehot = (jnp.arange(cache_len)[None, :, None] == slot[:, None, None])
+        return jnp.where(onehot, new.astype(buf.dtype), buf)
+
+    ckv = write(cache["ckv"], ckv_new)
+    kpe = write(cache["kpe"], kpe_new)
+
+    scores = (jnp.einsum("bshk,btk->bsht", q_lat, ckv.astype(jnp.float32))
+              + jnp.einsum("bshd,btd->bsht", q_pe.astype(jnp.float32),
+                           kpe.astype(jnp.float32))) * spec.scale
+    kposs = jnp.arange(cache_len)[None, :]
+    if rolling:
+        valid = kposs < jnp.minimum(pos + 1, cache_len)[:, None]
+    else:
+        valid = kposs <= pos[:, None]
+        if spec.window is not None:
+            valid &= kposs > (pos[:, None] - spec.window)
+    scores = scores + _mask_bias(valid[:, None, None, :])
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bsht,btk->bshk", probs, ckv.astype(jnp.float32))
+    # absorb W_uv: out[h, vd] = out_lat[h, kvr] @ W_uv[kvr, h*vd]
+    wv = p["wv_up"]["w"].reshape(spec.kv_lora_rank, h, spec.v_head_dim)
+    out = jnp.einsum("bshk,khd->bshd", out_lat, wv.astype(jnp.float32))
+    y = L.dense(p["wo"], out.reshape(b, 1, -1).astype(x.dtype))
+    return y, {"ckv": ckv, "kpe": kpe}

@@ -1,0 +1,230 @@
+"""Per-family block functions with a uniform (init / train / decode / cache)
+interface so `model.py` can scan heterogeneous super-blocks.
+
+Block layout (pre-norm residual):
+    x = x + mixer(norm(x))
+    x = x + ffn(norm(x))          # if the block has an ffn
+
+Decode caches are dicts per block; see models/attention.py and
+models/recurrent.py for state conventions.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import recurrent as R
+
+PyTree = Any
+
+
+def _norm_init(cfg, d=None):
+    return L.norm_init(d or cfg.d_model, cfg.pdtype, bias=(cfg.norm == "ln"))
+
+
+def norm_apply(cfg, p, x):
+    return L.rms_norm(p, x) if cfg.norm == "rms" else L.layer_norm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_block(cfg, spec, key: jax.Array) -> dict:
+    """Initialize one sub-block's params (mixer + optional ffn)."""
+    k_mix, k_ffn, k_extra = jax.random.split(key, 3)
+    p: dict = {"norm_mix": _norm_init(cfg)}
+    kind = spec.kind
+    if kind in ("attn", "local_attn", "cross_attn"):
+        p["attn"] = A.init_gqa(k_mix, cfg.d_model, cfg.attn_spec(kind),
+                               cfg.pdtype)
+    elif kind == "mla":
+        p["attn"] = A.init_mla(k_mix, cfg.d_model, cfg.mla_spec(), cfg.pdtype)
+    elif kind == "rglru":
+        d_rnn = cfg.rnn_width_
+        ks = jax.random.split(k_mix, 4)
+        p["rec"] = {
+            "w_gate": L.dense_init(ks[0], cfg.d_model, d_rnn, cfg.pdtype),
+            "w_x": L.dense_init(ks[1], cfg.d_model, d_rnn, cfg.pdtype),
+            "conv": R.init_conv1d(ks[2], d_rnn, cfg.conv_width, cfg.pdtype),
+            "rglru": R.init_rglru(ks[3], d_rnn, cfg.pdtype),
+            "w_out": L.dense_init(k_extra, d_rnn, cfg.d_model, cfg.pdtype),
+        }
+    elif kind == "mlstm":
+        d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = d_inner // cfg.num_heads
+        ks = jax.random.split(k_mix, 4)
+        p["rec"] = {
+            "w_up": L.dense_init(ks[0], cfg.d_model, 2 * d_inner, cfg.pdtype),
+            "conv": R.init_conv1d(ks[1], d_inner, cfg.conv_width, cfg.pdtype),
+            "cell": R.init_mlstm(ks[2], d_inner, cfg.num_heads, hd, cfg.pdtype),
+            "w_down": L.dense_init(ks[3], d_inner, cfg.d_model, cfg.pdtype),
+        }
+    elif kind == "slstm":
+        hd = cfg.d_model // cfg.num_heads
+        ks = jax.random.split(k_mix, 2)
+        p["rec"] = {
+            "cell": R.init_slstm(ks[0], cfg.d_model, cfg.num_heads, hd,
+                                 cfg.pdtype),
+            "w_out": L.dense_init(ks[1], cfg.d_model, cfg.d_model, cfg.pdtype),
+        }
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    if spec.ffn == "mlp":
+        p["norm_ffn"] = _norm_init(cfg)
+        p["ffn"] = L.init_mlp(k_ffn, cfg.d_model, cfg.d_ff, cfg.pdtype,
+                              gated=(cfg.act != "gelu"))
+    elif spec.ffn == "moe":
+        p["norm_ffn"] = _norm_init(cfg)
+        p["ffn"] = M.init_moe(k_ffn, cfg.d_model, cfg.moe_spec(), cfg.pdtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill (full sequence)
+# ---------------------------------------------------------------------------
+
+def apply_block(cfg, spec, p: dict, x: jnp.ndarray,
+                memory: Optional[jnp.ndarray],
+                positions: Optional[jnp.ndarray]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence block application. Returns (x, moe_aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    kind = spec.kind
+    y = norm_apply(cfg, p["norm_mix"], x)
+    if kind in ("attn", "local_attn"):
+        h = A.gqa_forward(p["attn"], cfg.attn_spec(kind), y, positions)
+    elif kind == "cross_attn":
+        h = A.gqa_forward(p["attn"], cfg.attn_spec(kind), y, kv_x=memory)
+    elif kind == "mla":
+        h = A.mla_forward(p["attn"], cfg.mla_spec(), y, positions)
+    elif kind == "rglru":
+        r = p["rec"]
+        gate = jax.nn.gelu(L.dense(r["w_gate"], y))
+        u = R.conv1d(r["conv"], L.dense(r["w_x"], y))
+        h = L.dense(r["w_out"], gate * R.rglru(r["rglru"], u))
+    elif kind == "mlstm":
+        r = p["rec"]
+        up = L.dense(r["w_up"], y)
+        main, gate = jnp.split(up, 2, axis=-1)
+        main = R.conv1d(r["conv"], main)
+        h = L.dense(r["w_down"], R.mlstm(r["cell"], main) * jax.nn.silu(gate))
+    elif kind == "slstm":
+        r = p["rec"]
+        h = L.dense(r["w_out"], R.slstm(r["cell"], y))
+    else:
+        raise ValueError(kind)
+    x = x + h
+
+    if "ffn" in p:
+        y = norm_apply(cfg, p["norm_ffn"], x)
+        if spec.ffn == "moe":
+            h, aux = M.moe_ffn(p["ffn"], cfg.moe_spec(), y)
+        else:
+            h = L.mlp(p["ffn"], y, cfg.act)
+        x = x + h
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token, cached state)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg, spec, batch: int, cache_len: int,
+                     window: Optional[int]) -> dict:
+    """Zeroed decode cache for one sub-block.  ``window`` overrides the
+    attention window (long-context sliding-window variant); the cache
+    buffer is min(cache_len, window) wide for windowed attention."""
+    kind = spec.kind
+    dt = cfg.cdtype
+    if kind in ("attn", "local_attn"):
+        aspec = cfg.attn_spec(kind, window_override=window)
+        buf = cache_len if aspec.window is None else min(cache_len, aspec.window)
+        return A.init_gqa_cache(aspec, batch, buf, dt)
+    if kind == "cross_attn":
+        aspec = cfg.attn_spec(kind)
+        shape = (batch, cfg.num_memory_tokens, aspec.num_kv_heads,
+                 aspec.head_dim)
+        return {"mk": jnp.zeros(shape, dt), "mv": jnp.zeros(shape, dt)}
+    if kind == "mla":
+        mspec = cfg.mla_spec(window_override=window)
+        buf = cache_len if mspec.window is None else min(cache_len, mspec.window)
+        return A.init_mla_cache(mspec, batch, buf, dt)
+    if kind == "rglru":
+        d_rnn = cfg.rnn_width_
+        return {"conv": R.init_conv1d_state(batch, d_rnn, cfg.conv_width, dt),
+                "rnn": R.init_rglru_state(batch, d_rnn)}
+    if kind == "mlstm":
+        d_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+        hd = d_inner // cfg.num_heads
+        return {"conv": R.init_conv1d_state(batch, d_inner, cfg.conv_width, dt),
+                "cell": R.init_mlstm_state(batch, cfg.num_heads, hd)}
+    if kind == "slstm":
+        hd = cfg.d_model // cfg.num_heads
+        return {"cell": R.init_slstm_state(batch, cfg.num_heads, hd)}
+    raise ValueError(kind)
+
+
+def apply_block_decode(cfg, spec, p: dict, x: jnp.ndarray, cache: dict,
+                       pos: jnp.ndarray,
+                       window: Optional[int]) -> tuple[jnp.ndarray, dict]:
+    """One-token block application. x: (B,1,d). Returns (x, new_cache)."""
+    kind = spec.kind
+    y = norm_apply(cfg, p["norm_mix"], x)
+    new_cache = cache
+    if kind in ("attn", "local_attn"):
+        aspec = cfg.attn_spec(kind, window_override=window)
+        h, new_cache = A.gqa_decode(p["attn"], aspec, y, cache, pos)
+    elif kind == "cross_attn":
+        h = A.cross_decode(p["attn"], cfg.attn_spec(kind), y,
+                           cache["mk"], cache["mv"])
+    elif kind == "mla":
+        h, new_cache = A.mla_decode(p["attn"], cfg.mla_spec(window_override=window),
+                                    y, cache, pos)
+    elif kind == "rglru":
+        r = p["rec"]
+        gate = jax.nn.gelu(L.dense(r["w_gate"], y))
+        u, conv_st = R.conv1d_step(r["conv"], L.dense(r["w_x"], y),
+                                   cache["conv"])
+        hr, rnn_st = R.rglru_step(r["rglru"], u, cache["rnn"])
+        h = L.dense(r["w_out"], gate * hr)
+        new_cache = {"conv": conv_st, "rnn": rnn_st}
+    elif kind == "mlstm":
+        r = p["rec"]
+        up = L.dense(r["w_up"], y)
+        main, gate = jnp.split(up, 2, axis=-1)
+        main, conv_st = R.conv1d_step(r["conv"], main, cache["conv"])
+        hr, cell_st = R.mlstm_step(r["cell"], main, cache["cell"])
+        h = L.dense(r["w_down"], hr * jax.nn.silu(gate))
+        new_cache = {"conv": conv_st, "cell": cell_st}
+    elif kind == "slstm":
+        r = p["rec"]
+        hr, cell_st = R.slstm_step(r["cell"], y, cache["cell"])
+        h = L.dense(r["w_out"], hr)
+        new_cache = {"cell": cell_st}
+    else:
+        raise ValueError(kind)
+    x = x + h
+
+    if "ffn" in p:
+        y = norm_apply(cfg, p["norm_ffn"], x)
+        if spec.ffn == "moe":
+            h, _ = M.moe_ffn(p["ffn"], cfg.moe_spec(), y)
+        else:
+            h = L.mlp(p["ffn"], y, cfg.act)
+        x = x + h
+    return x, new_cache
+
+
+def fill_cross_cache(cfg, spec, p: dict, cache: dict,
+                     memory: jnp.ndarray) -> dict:
+    """Populate a cross-attention block's static memory K/V."""
+    mk, mv = A.cross_memory(p["attn"], cfg.attn_spec("cross_attn"), memory)
+    return {"mk": mk.astype(cache["mk"].dtype),
+            "mv": mv.astype(cache["mv"].dtype)}

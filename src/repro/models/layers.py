@@ -1,0 +1,143 @@
+"""Shared neural-net layers (pure-functional JAX, params = nested dicts).
+
+Conventions:
+  * every ``init_*`` returns a pytree of arrays in ``param_dtype``;
+  * every apply function computes in ``compute_dtype`` (activations) with
+    float32 accumulation where it matters (norms, softmax, loss);
+  * weight matrices are stored (in_features, out_features) so the forward
+    is ``x @ w``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype,
+               scale: float | None = None) -> dict:
+    scale = (d_in ** -0.5) if scale is None else scale
+    return {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+
+
+def dense_bias_init(key: jax.Array, d_in: int, d_out: int, dtype,
+                    scale: float | None = None) -> dict:
+    p = dense_init(key, d_in, d_out, dtype, scale)
+    p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, dtype) -> dict:
+    return {"embedding": (jax.random.normal(key, (vocab, d_model)) * 0.02
+                          ).astype(dtype)}
+
+
+def norm_init(d: int, dtype, bias: bool = False) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Apply functions
+# ---------------------------------------------------------------------------
+
+def dense(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed(p: dict, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["embedding"], tokens, axis=0).astype(dtype)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tied unembedding: logits = x @ E^T (float32)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      p["embedding"].astype(jnp.float32))
+
+
+def rms_norm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_frequencies(dim, theta)                       # (dim/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dim/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, dim/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, dtype,
+             gated: bool = True, bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    make = dense_bias_init if bias else dense_init
+    p = {"w_in": make(ks[0], d_model, d_ff, dtype),
+         "w_out": make(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = make(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def mlp(p: dict, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    from repro.models import sharding as S
+    act_fn = ACTS[act]
+    h = dense(p["w_in"], x)
+    if "w_gate" in p:
+        h = act_fn(dense(p["w_gate"], x)) * h
+    else:
+        h = act_fn(h)
+    # pin the Megatron layout: hidden sharded over the tensor axis, output
+    # back to the residual layout — otherwise the partitioner bounces
+    # between batch-sharded and feature-sharded layouts (full-activation
+    # all-gathers per layer, observed on qwen2 prefill)
+    h = S.constrain(h, "batch", "seq", "mlp")
+    out = dense(p["w_out"], h)
+    return S.constrain(out, "batch", "seq", "embed")

@@ -1,0 +1,51 @@
+"""The paper's experiment models (§V): a shallow neural network (one
+hidden layer of 60 neurons) and a DNN (hidden layers of 60 and 20),
+cross-entropy loss.  Pure-functional, prunable via core.pruning masks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_mlp_classifier", "mlp_logits", "classifier_loss",
+           "accuracy", "SHALLOW_HIDDEN", "DNN_HIDDEN"]
+
+SHALLOW_HIDDEN = (60,)          # paper footnote 1
+DNN_HIDDEN = (60, 20)
+
+
+def init_mlp_classifier(key: jax.Array, dim_in: int, hidden: tuple[int, ...],
+                        num_classes: int) -> dict:
+    sizes = (dim_in,) + tuple(hidden) + (num_classes,)
+    keys = jax.random.split(key, len(sizes) - 1)
+    params = {}
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"layer{i}"] = {
+            "w": jax.random.normal(keys[i], (a, b)) * (2.0 / a) ** 0.5,
+            "b": jnp.zeros((b,)),
+        }
+    return params
+
+
+def mlp_logits(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    n = len(params)
+    h = x
+    for i in range(n):
+        p = params[f"layer{i}"]
+        h = h @ p["w"] + p["b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def classifier_loss(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None].astype(jnp.int32),
+                                         axis=-1))
+
+
+def accuracy(params: dict, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(mlp_logits(params, x), axis=-1) == y)
+                    .astype(jnp.float32))

@@ -1,0 +1,275 @@
+"""Model orchestration: init / forward / loss / decode for every assigned
+architecture, driven entirely by ``ArchConfig``.
+
+Layer stacks are scanned per *stage* (see configs/base.py): stage params
+have a leading ``repeats`` dim on every leaf, so 62-layer models compile
+as one scan body and decode caches stack the same way.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as B
+from repro.models import layers as L
+from repro.models import sharding as S
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_stage(cfg, stage, key: jax.Array) -> dict:
+    """Stacked params: every leaf gets leading dim = stage.repeats."""
+    keys = jax.random.split(key, stage.repeats)
+
+    def one(k):
+        ks = jax.random.split(k, len(stage.blocks))
+        return {f"b{i}": B.init_block(cfg, spec, ks[i])
+                for i, spec in enumerate(stage.blocks)}
+
+    return jax.vmap(one)(keys)
+
+
+def init_params(cfg, key: jax.Array) -> dict:
+    keys = jax.random.split(key, len(cfg.stages) + 4)
+    params: dict = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "final_norm": L.norm_init(cfg.d_model, cfg.pdtype,
+                                  bias=(cfg.norm == "ln")),
+        "stages": [_init_stage(cfg, st, keys[4 + i])
+                   for i, st in enumerate(cfg.stages)],
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size,
+                                         cfg.pdtype)
+    if cfg.num_memory_tokens > 0:
+        params["memory_proj"] = L.dense_init(keys[2], cfg.memory_dim_,
+                                             cfg.d_model, cfg.pdtype)
+    if cfg.encoder_layers > 0:
+        from repro.configs.base import BlockSpec, StageSpec
+        enc_stage = StageSpec(cfg.encoder_layers, (BlockSpec("attn", "mlp"),))
+        params["encoder"] = {
+            "stage": _init_stage(cfg.replace(qkv_bias=False), enc_stage, keys[3]),
+            "norm": L.norm_init(cfg.d_model, cfg.pdtype, bias=(cfg.norm == "ln")),
+        }
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _stage_forward(cfg, stage, stage_params, x, memory, positions):
+    """Scan the super-block over its repeats."""
+
+    def body(carry, layer_params):
+        h, aux = carry
+        for i, spec in enumerate(stage.blocks):
+            h, a = B.apply_block(cfg, spec, layer_params[f"b{i}"], h,
+                                 memory, positions)
+            aux = aux + a
+        h = S.constrain(h, "batch", "seq", "embed")
+        return (h, aux), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stage_params)
+    return x, aux
+
+
+def _encode_memory(cfg, params, memory_raw: jnp.ndarray) -> Optional[jnp.ndarray]:
+    """Stub-frontend embeddings -> model-space memory (VLM: projection only;
+    whisper: projection + bidirectional encoder)."""
+    if memory_raw is None:
+        return None
+    mem = L.dense(params["memory_proj"], memory_raw.astype(cfg.cdtype))
+    if cfg.encoder_layers > 0:
+        from repro.configs.base import BlockSpec, StageSpec
+        enc_stage = StageSpec(cfg.encoder_layers, (BlockSpec("attn", "mlp"),))
+        enc_cfg = cfg.replace(qkv_bias=False)
+        b, s, _ = mem.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        # bidirectional: reuse attn block with causal disabled via spec hack
+        def body(carry, layer_params):
+            h, _ = carry
+            y = B.norm_apply(enc_cfg, layer_params["b0"]["norm_mix"], h)
+            import dataclasses as _dc
+            from repro.models import attention as A
+            spec = _dc.replace(enc_cfg.attn_spec("attn"), causal=False)
+            h = h + A.gqa_forward(layer_params["b0"]["attn"], spec, y, positions)
+            y = B.norm_apply(enc_cfg, layer_params["b0"]["norm_ffn"], h)
+            h = h + L.mlp(layer_params["b0"]["ffn"], y, enc_cfg.act)
+            return (h, jnp.zeros((), jnp.float32)), None
+        if cfg.remat == "block":
+            body = jax.checkpoint(body)
+        (mem, _), _ = jax.lax.scan(body, (mem, jnp.zeros((), jnp.float32)),
+                                   params["encoder"]["stage"])
+        mem = B.norm_apply(cfg, params["encoder"]["norm"], mem)
+    return mem
+
+
+def forward(cfg, params, tokens: jnp.ndarray,
+            memory: Optional[jnp.ndarray] = None
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32 -> (logits (B,S,V) float32, moe_aux scalar)."""
+    x, aux = hidden_states(cfg, params, tokens, memory)
+    logits = _unembed(cfg, params, x)
+    logits = S.constrain(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+# (seq * vocab) threshold above which the loss streams over seq chunks
+# instead of materializing the full (B, S, V) logits
+_CHUNKED_LOSS_ELEMS = 64 * 1024 * 1024
+_LOSS_CHUNK = 512
+
+
+def hidden_states(cfg, params, tokens: jnp.ndarray,
+                  memory: Optional[jnp.ndarray] = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Residual stream after the final norm (pre-unembedding)."""
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens, cfg.cdtype)
+    x = S.constrain(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    mem = _encode_memory(cfg, params, memory) if cfg.num_memory_tokens else None
+    aux = jnp.zeros((), jnp.float32)
+    for stage, stage_params in zip(cfg.stages, params["stages"]):
+        x, a = _stage_forward(cfg, stage, stage_params, x, mem, positions)
+        aux = aux + a
+    x = B.norm_apply(cfg, params["final_norm"], x)
+    return x, aux
+
+
+def _unembed(cfg, params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return L.dense(params["unembed"], x.astype(jnp.float32))
+
+
+def _chunked_nll(cfg, params, x: jnp.ndarray, targets: jnp.ndarray,
+                 chunk: int = _LOSS_CHUNK) -> jnp.ndarray:
+    """Streaming cross-entropy: logits exist one (B, chunk, V) block at a
+    time (checkpointed so the backward recomputes them too)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+    xc = jnp.moveaxis(x.reshape(b, n, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(total, xs):
+        xb, tb = xs
+        logits = _unembed(cfg, params, xb)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tb[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return total + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, tc))
+    return total / (b * s)
+
+
+def loss_fn(cfg, params, batch: dict, aux_weight: float = 0.01
+            ) -> tuple[jnp.ndarray, dict]:
+    """Causal LM loss (next-token); batch = {tokens, [memory], [mask]}.
+
+    Large (seq x vocab) products stream the unembedding+CE over sequence
+    chunks so the full logits tensor is never materialized."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    mask = batch.get("mask")
+    if mask is None and (s - 1) * cfg.vocab_size > _CHUNKED_LOSS_ELEMS:
+        x, aux = hidden_states(cfg, params, tokens, batch.get("memory"))
+        # shift: positions 0..S-2 predict tokens 1..S-1
+        loss = _chunked_nll(cfg, params, x[:, :-1], tokens[:, 1:])
+    else:
+        logits, aux = forward(cfg, params, tokens, batch.get("memory"))
+        targets = tokens[:, 1:]
+        logits = logits[:, :-1]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        if mask is not None:
+            mask = mask[:, 1:].astype(jnp.float32)
+            loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            loss = jnp.mean(nll)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, cache_len: int,
+               window: Optional[int] = None) -> dict:
+    """Zeroed decode cache; every stage's leaves carry a leading repeats dim.
+    ``window`` enables the rolling-buffer long-context variant."""
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32), "stages": []}
+    for stage in cfg.stages:
+        one = {f"b{i}": B.init_block_cache(cfg, spec, batch, cache_len, window)
+               for i, spec in enumerate(stage.blocks)}
+        stacked = jax.tree.map(
+            lambda a: jnp.zeros((stage.repeats,) + a.shape, a.dtype), one)
+        cache["stages"].append(stacked)
+    return cache
+
+
+def fill_cross_caches(cfg, params, cache: dict, memory: jnp.ndarray) -> dict:
+    """Populate static cross-attention K/V from (stub) memory embeddings."""
+    mem = _encode_memory(cfg, params, memory)
+    new_stages = []
+    for stage, sp, sc in zip(cfg.stages, params["stages"], cache["stages"]):
+        out = dict(sc)
+        for i, spec in enumerate(stage.blocks):
+            if spec.kind != "cross_attn":
+                continue
+            filled = jax.vmap(
+                lambda p, c: B.fill_cross_cache(cfg, spec, p, c, mem)
+            )(sp[f"b{i}"], sc[f"b{i}"])
+            out[f"b{i}"] = filled
+        new_stages.append(out)
+    return {"pos": cache["pos"], "stages": new_stages}
+
+
+def decode_step(cfg, params, token: jnp.ndarray, cache: dict,
+                window: Optional[int] = None) -> tuple[jnp.ndarray, dict]:
+    """One serving step. token: (B,1) int32 -> (logits (B,V), new cache)."""
+    pos = cache["pos"]
+    x = L.embed(params["embed"], token, cfg.cdtype)
+    new_stages = []
+    for stage, stage_params, stage_cache in zip(cfg.stages, params["stages"],
+                                                cache["stages"]):
+        def body(h, xs):
+            layer_params, layer_cache = xs
+            new_c = {}
+            for i, spec in enumerate(stage.blocks):
+                h, nc = B.apply_block_decode(cfg, spec, layer_params[f"b{i}"],
+                                             h, layer_cache[f"b{i}"], pos,
+                                             window)
+                new_c[f"b{i}"] = nc
+            return h, new_c
+        x, new_cache = jax.lax.scan(body, x, (stage_params, stage_cache))
+        new_stages.append(new_cache)
+    x = B.norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed(params["embed"], x)
+    else:
+        logits = L.dense(params["unembed"], x.astype(jnp.float32))
+    return logits[:, 0, :], {"pos": pos + 1, "stages": new_stages}

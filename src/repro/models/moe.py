@@ -1,0 +1,129 @@
+"""Mixture-of-Experts FFN with top-k routing and sort-based dispatch.
+
+Design notes (TPU):
+
+* Dispatch uses **sort + gather/scatter**, not the classic one-hot einsum:
+  the einsum form costs N*E*C*d dense MXU FLOPs for what is a permutation,
+  which would poison the roofline's compute term (HLO FLOPs >> useful
+  FLOPs).  Sorting token->expert assignments keeps dispatch on the VPU /
+  memory system and the MXU FLOPs equal to the *active* expert compute.
+* Fixed expert capacity C = ceil(tokens*top_k/E * capacity_factor) keeps
+  all shapes static (jit-able); overflow tokens are dropped (their combine
+  weight contribution is zero), standard Switch/GShard semantics.
+* Expert weights are stored stacked (E, d_in, d_ff); the E dim shards
+  over the "model" mesh axis when it divides (olmoe: 64 experts / 16),
+  otherwise the d_ff dim shards instead (grok has 8 experts on a 16-wide
+  axis) — see launch/shardings.param_pspec.
+
+The auxiliary load-balance loss follows Switch Transformer:
+  aux = E * sum_e (fraction_tokens_e * mean_router_prob_e).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import sharding as S
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff: int                 # per-expert hidden width
+    capacity_factor: float = 1.25
+    gated: bool = True
+    act: str = "silu"
+
+
+def init_moe(key: jax.Array, d_model: int, spec: MoESpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    e, f = spec.num_experts, spec.d_ff
+    sc_in = d_model ** -0.5
+    sc_out = f ** -0.5
+    p = {
+        "router": L.dense_init(ks[0], d_model, e, jnp.float32),
+        "w_in": (jax.random.normal(ks[1], (e, d_model, f)) * sc_in).astype(dtype),
+        "w_out": (jax.random.normal(ks[2], (e, f, d_model)) * sc_out).astype(dtype),
+    }
+    if spec.gated:
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d_model, f))
+                       * sc_in).astype(dtype)
+    return p
+
+
+def expert_capacity(num_tokens: int, spec: MoESpec) -> int:
+    cap = int(num_tokens * spec.top_k * spec.capacity_factor
+              / spec.num_experts + 0.999)
+    return max(cap, spec.top_k)
+
+
+def moe_ffn(p: dict, spec: MoESpec, x: jnp.ndarray
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss).  Sort-based top-k dispatch."""
+    b, s, d = x.shape
+    n = b * s
+    e, k = spec.num_experts, spec.top_k
+    cap = expert_capacity(n, spec)
+    xf = x.reshape(n, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, k)                    # (N, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # ---- load balance aux (Switch) ----
+    onehot_frac = jnp.zeros((e,), jnp.float32).at[top_ids.reshape(-1)].add(1.0)
+    frac_tokens = onehot_frac / (n * k)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+
+    # ---- sort-based dispatch ----
+    flat_exp = top_ids.reshape(n * k)                           # expert id
+    flat_src = jnp.repeat(jnp.arange(n), k)                     # token id
+    flat_w = top_w.reshape(n * k)
+    order = jnp.argsort(flat_exp, stable=True)
+    sorted_exp = flat_exp[order]
+    sorted_src = flat_src[order]
+    sorted_w = flat_w[order]
+    # position of each routed token within its expert's queue
+    counts = jnp.zeros((e,), jnp.int32).at[sorted_exp].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(n * k, dtype=jnp.int32) - starts[sorted_exp]
+    keep = pos < cap
+    slot = jnp.where(keep, sorted_exp * cap + pos, e * cap)     # overflow bin
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xf[sorted_src],
+                                     jnp.zeros((1, d), x.dtype)))
+    xe = buf[:e * cap].reshape(e, cap, d)                       # (E, C, d)
+
+    # ---- expert FFN (the real MXU compute) ----
+    # Expert weights shard E over the tensor axis when E divides it
+    # (launch/shardings.param_pspec 4-D branch): with d_in > d_ff (olmoe)
+    # the larger-dim Megatron rule would otherwise shard the CONTRACTION
+    # dim and GSPMD all-reduces the full (E, C, d_ff) expert activation
+    # (observed: 40 GB AR per layer).  Activation-side pins were tried and
+    # REFUTED (EXPERIMENTS.md §Perf extras): they fight the sort-based
+    # global dispatch; a shard_map all-to-all dispatch is the proper
+    # follow-up for fully expert-parallel MoE.
+    act_fn = L.ACTS[spec.act]
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(x.dtype))
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(x.dtype))
+        h = act_fn(g) * h
+    else:
+        h = act_fn(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype))
+
+    # ---- combine (scatter-add back, weighted) ----
+    ye_flat = jnp.concatenate([ye.reshape(e * cap, d),
+                               jnp.zeros((1, d), ye.dtype)], axis=0)
+    routed = ye_flat[slot] * (sorted_w * keep)[:, None].astype(ye.dtype)
+    y = jnp.zeros((n, d), ye.dtype).at[sorted_src].add(routed)
+    return y.reshape(b, s, d).astype(x.dtype), aux

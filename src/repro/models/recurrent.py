@@ -1,0 +1,271 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM), plus the causal depthwise conv they use.
+
+Training uses ``associative_scan`` for the linear RG-LRU recurrence and
+``lax.scan`` for the nonlinear (s/m)LSTM cells; decode carries O(1) state.
+
+State conventions (decode):
+  conv:   {"buf": (B, width-1, d)}         — last width-1 inputs
+  rglru:  {"h": (B, d)}
+  mlstm:  {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)}
+  slstm:  {"c": (B,H,hd), "n": (B,H,hd), "m": (B,H,hd), "h": (B,H,hd)}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+_SQRT_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key: jax.Array, d: int, width: int, dtype) -> dict:
+    w = jax.random.normal(key, (width, d)) * (width * d) ** -0.5
+    return {"w": w.astype(dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def conv1d(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Causal depthwise conv over (B, S, d)."""
+    width = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+              for i in range(width))
+    return out + p["b"].astype(x.dtype)
+
+
+def init_conv1d_state(batch: int, d: int, width: int, dtype) -> dict:
+    return {"buf": jnp.zeros((batch, width - 1, d), dtype)}
+
+
+def conv1d_step(p: dict, x: jnp.ndarray, state: dict) -> tuple[jnp.ndarray, dict]:
+    """x: (B, 1, d)."""
+    width = p["w"].shape[0]
+    hist = jnp.concatenate([state["buf"], x.astype(state["buf"].dtype)], axis=1)
+    out = sum(hist[:, i:i + 1, :] * p["w"][i].astype(x.dtype)
+              for i in range(width)) + p["b"].astype(x.dtype)
+    return out, {"buf": hist[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru(key: jax.Array, d: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Lambda init so that a = sigmoid(Lambda)^c spans slow/fast decay
+    u = jax.random.uniform(k1, (d,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / 8.0) / (1.0 - u ** (1.0 / 8.0)))
+    return {"lam": lam.astype(jnp.float32),
+            "w_r": L.dense_bias_init(k2, d, d, dtype),
+            "w_i": L.dense_bias_init(k3, d, d, dtype)}
+
+
+_RG_C = 8.0
+
+
+def _rglru_coeffs(p: dict, x: jnp.ndarray):
+    r = jax.nn.sigmoid(L.dense(p["w_r"], x).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["w_i"], x).astype(jnp.float32))
+    log_a = -_RG_C * r * jax.nn.softplus(p["lam"])      # (B,S,d) <= 0
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), _SQRT_EPS)) * gated_x
+    return a, b
+
+
+def rglru(p: dict, x: jnp.ndarray, h0: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Full-sequence RG-LRU via associative scan.  x: (B,S,d)."""
+    a, b = _rglru_coeffs(p, x)
+    if h0 is not None:
+        # fold the initial state into the first step: h1 = a1 h0 + b1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def init_rglru_state(batch: int, d: int) -> dict:
+    return {"h": jnp.zeros((batch, d), jnp.float32)}
+
+
+def rglru_step(p: dict, x: jnp.ndarray, state: dict) -> tuple[jnp.ndarray, dict]:
+    """x: (B,1,d)."""
+    a, b = _rglru_coeffs(p, x)
+    h = a[:, 0] * state["h"] + b[:, 0]
+    return h[:, None, :].astype(x.dtype), {"h": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating) — xLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, d_in: int, num_heads: int, head_dim: int,
+               dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    d_qkv = num_heads * head_dim
+    return {
+        "wq": L.dense_init(ks[0], d_in, d_qkv, dtype),
+        "wk": L.dense_init(ks[1], d_in, d_qkv, dtype),
+        "wv": L.dense_init(ks[2], d_in, d_qkv, dtype),
+        "w_i": L.dense_bias_init(ks[3], d_in, num_heads, dtype),
+        "w_f": L.dense_bias_init(ks[4], d_in, num_heads, dtype),
+        "w_o": L.dense_bias_init(ks[5], d_in, d_qkv, dtype),
+    }
+
+
+def _mlstm_gates(p: dict, x: jnp.ndarray):
+    """Pre-activation gates (float32): i~, f~ (B,S,H); q,k,v (B,S,H,hd)."""
+    h = p["w_i"]["w"].shape[1]
+    q = L.dense(p["wq"], x)
+    k = L.dense(p["wk"], x)
+    v = L.dense(p["wv"], x)
+
+    def heads(t):
+        return t.reshape(t.shape[:-1] + (h, t.shape[-1] // h)).astype(jnp.float32)
+
+    i_pre = L.dense(p["w_i"], x).astype(jnp.float32)
+    f_pre = L.dense(p["w_f"], x).astype(jnp.float32)
+    o = jax.nn.sigmoid(L.dense(p["w_o"], x).astype(jnp.float32))
+    return heads(q), heads(k), heads(v), i_pre, f_pre, o
+
+
+def _mlstm_cell(carry, inp):
+    """One stabilized mLSTM step.  carry: (C, n, m)."""
+    c_mat, n_vec, m = carry
+    q, k, v, i_pre, f_pre = inp
+    hd = q.shape[-1]
+    log_f = -jax.nn.softplus(-f_pre)          # log sigmoid(f~)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_eff = jnp.exp(log_f + m - m_new)        # (B,H)
+    i_eff = jnp.exp(i_pre - m_new)
+    k_scaled = k * (hd ** -0.5)
+    c_new = f_eff[..., None, None] * c_mat \
+        + i_eff[..., None, None] * (v[..., :, None] * k_scaled[..., None, :])
+    n_new = f_eff[..., None] * n_vec + i_eff[..., None] * k_scaled
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)), 1.0)
+    h = num / den[..., None]
+    return (c_new, n_new, m_new), h
+
+
+def mlstm(p: dict, x: jnp.ndarray, state: dict | None = None) -> jnp.ndarray:
+    """Full-sequence mLSTM via lax.scan over time.  x: (B,S,d_in)."""
+    q, k, v, i_pre, f_pre, o = _mlstm_gates(p, x)
+    b, s, h, hd = q.shape
+    if state is None:
+        state = init_mlstm_state(b, h, hd)
+    carry = (state["C"], state["n"], state["m"])
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_pre, f_pre))
+    _, hs = jax.lax.scan(_mlstm_cell, carry, xs)
+    hs = jnp.moveaxis(hs, 0, 1)                # (B,S,H,hd)
+    out = (o.reshape(b, s, h, hd) * hs).reshape(b, s, h * hd)
+    return out.astype(x.dtype)
+
+
+def init_mlstm_state(batch: int, num_heads: int, head_dim: int) -> dict:
+    return {"C": jnp.zeros((batch, num_heads, head_dim, head_dim), jnp.float32),
+            "n": jnp.zeros((batch, num_heads, head_dim), jnp.float32),
+            "m": jnp.zeros((batch, num_heads), jnp.float32)}
+
+
+def mlstm_step(p: dict, x: jnp.ndarray, state: dict) -> tuple[jnp.ndarray, dict]:
+    """x: (B,1,d_in)."""
+    q, k, v, i_pre, f_pre, o = _mlstm_gates(p, x)
+    carry = (state["C"], state["n"], state["m"])
+    (c_new, n_new, m_new), h = _mlstm_cell(
+        carry, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+    b, _, nh, hd = q.shape
+    out = (o[:, 0].reshape(b, nh, hd) * h).reshape(b, 1, nh * hd)
+    return out.astype(x.dtype), {"C": c_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, exponential gating, head-wise recurrence) — xLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, d_in: int, num_heads: int, head_dim: int,
+               dtype) -> dict:
+    ks = jax.random.split(key, 9)
+    d_h = num_heads * head_dim
+    rec = lambda k: (jax.random.normal(k, (num_heads, head_dim, head_dim))
+                     * head_dim ** -0.5).astype(dtype)
+    return {
+        "w_z": L.dense_bias_init(ks[0], d_in, d_h, dtype),
+        "w_i": L.dense_bias_init(ks[1], d_in, d_h, dtype),
+        "w_f": L.dense_bias_init(ks[2], d_in, d_h, dtype),
+        "w_o": L.dense_bias_init(ks[3], d_in, d_h, dtype),
+        "r_z": rec(ks[4]), "r_i": rec(ks[5]), "r_f": rec(ks[6]),
+        "r_o": rec(ks[7]),
+    }
+
+
+def _slstm_cell(p: dict, carry, inp):
+    """carry: (c, n, m, h) each (B,H,hd); inp: pre-activations (B,H,hd) x4."""
+    c, n, m, h = carry
+    z_pre, i_pre, f_pre, o_pre = inp
+
+    def rec(r, h_):
+        return jnp.einsum("bhk,hkv->bhv", h_, r.astype(jnp.float32))
+
+    z = jnp.tanh(z_pre + rec(p["r_z"], h))
+    i_t = i_pre + rec(p["r_i"], h)
+    f_t = f_pre + rec(p["r_f"], h)
+    o = jax.nn.sigmoid(o_pre + rec(p["r_o"], h))
+    log_f = -jax.nn.softplus(-f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    f_eff = jnp.exp(log_f + m - m_new)
+    i_eff = jnp.exp(i_t - m_new)
+    c_new = f_eff * c + i_eff * z
+    n_new = jnp.maximum(f_eff * n + i_eff, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def _slstm_pre(p: dict, x: jnp.ndarray, num_heads: int):
+    def heads(t):
+        return t.reshape(t.shape[:-1] + (num_heads, t.shape[-1] // num_heads)
+                         ).astype(jnp.float32)
+    return (heads(L.dense(p["w_z"], x)), heads(L.dense(p["w_i"], x)),
+            heads(L.dense(p["w_f"], x)), heads(L.dense(p["w_o"], x)))
+
+
+def slstm(p: dict, x: jnp.ndarray, state: dict | None = None) -> jnp.ndarray:
+    """Full-sequence sLSTM. x: (B,S,d_in) -> (B,S,H*hd)."""
+    num_heads = p["r_z"].shape[0]
+    z, i, f, o = _slstm_pre(p, x, num_heads)
+    b, s, h, hd = z.shape
+    if state is None:
+        state = init_slstm_state(b, h, hd)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, i, f, o))
+    (c, n, m, hh), hs = jax.lax.scan(
+        lambda cr, it: _slstm_cell(p, cr, it), carry, xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, h * hd)
+    return hs.astype(x.dtype)
+
+
+def init_slstm_state(batch: int, num_heads: int, head_dim: int) -> dict:
+    z = jnp.zeros((batch, num_heads, head_dim), jnp.float32)
+    return {"c": z, "n": jnp.ones_like(z) * 1e-6, "m": z, "h": z}
+
+
+def slstm_step(p: dict, x: jnp.ndarray, state: dict) -> tuple[jnp.ndarray, dict]:
+    num_heads = p["r_z"].shape[0]
+    z, i, f, o = _slstm_pre(p, x, num_heads)
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h), out = _slstm_cell(p, carry,
+                                    (z[:, 0], i[:, 0], f[:, 0], o[:, 0]))
+    b, _, nh, hd = z.shape
+    return out.reshape(b, 1, nh * hd).astype(x.dtype), \
+        {"c": c, "n": n, "m": m, "h": h}

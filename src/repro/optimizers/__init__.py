@@ -1,0 +1,85 @@
+"""Pure-JAX pytree optimizers (no external deps).
+
+Each optimizer is a pair of functions:
+    state = init(params)
+    new_params, new_state = update(params, grads, state, lr)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, float], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(params, grads, state, lr):
+        new = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(params, grads, state, lr):
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(m_.dtype),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m_: p - lr * m_.astype(p.dtype), params, m)
+        return new, {"m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ +
+                         (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def step(p, m_, v_):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return p - lr * upd.astype(p.dtype)
+
+        return jax.tree.map(step, params, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+
+REGISTRY = {"sgd": sgd, "momentum": momentum, "adam": adam}

@@ -1,0 +1,144 @@
+"""flash_attention (chunked online-softmax path, used for S >= 2048) must
+match the dense attend() oracle — including GQA grouping, sliding windows,
+and MLA's asymmetric v_head_dim."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _qkv(b, s, h, hkv, hd, vd=None, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, vd or hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("h,hkv", [(4, 4), (8, 2), (8, 1)])
+def test_flash_matches_dense_gqa(h, hkv):
+    b, s, hd = 2, 256, 32
+    q, k, v = _qkv(b, s, h, hkv, hd)
+    scale = hd ** -0.5
+    flash = A.flash_attention(q, k, v, scale, causal=True,
+                              q_chunk=64, kv_chunk=64)
+    mask = A.causal_window_mask(s, s, 0, None)
+    dense = A.attend(q, k, v, mask, scale)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), **TOL)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_matches_dense_windowed(window):
+    b, s, h, hkv, hd = 1, 256, 4, 2, 32
+    q, k, v = _qkv(b, s, h, hkv, hd, seed=1)
+    scale = hd ** -0.5
+    flash = A.flash_attention(q, k, v, scale, causal=True, window=window,
+                              q_chunk=64, kv_chunk=64)
+    mask = A.causal_window_mask(s, s, 0, window)
+    dense = A.attend(q, k, v, mask, scale)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), **TOL)
+
+
+def test_flash_asymmetric_value_dim():
+    """MLA: q/k head_dim != v_head_dim (the dryrun regression)."""
+    b, s, h, hd, vd = 2, 128, 4, 96, 64
+    q, k, v = _qkv(b, s, h, h, hd, vd=vd, seed=2)
+    scale = hd ** -0.5
+    flash = A.flash_attention(q, k, v, scale, causal=True,
+                              q_chunk=32, kv_chunk=32)
+    mask = A.causal_window_mask(s, s, 0, None)
+    dense = A.attend(q, k, v, mask, scale)
+    assert flash.shape == (b, s, h, vd)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), **TOL)
+
+
+def test_flash_ragged_chunks():
+    """Chunk sizes that don't divide S are halved until they do."""
+    b, s, h, hd = 1, 96, 2, 16
+    q, k, v = _qkv(b, s, h, h, hd, seed=3)
+    scale = hd ** -0.5
+    flash = A.flash_attention(q, k, v, scale, causal=True,
+                              q_chunk=64, kv_chunk=64)   # 96 % 64 != 0
+    mask = A.causal_window_mask(s, s, 0, None)
+    dense = A.attend(q, k, v, mask, scale)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), **TOL)
+
+
+def test_gqa_forward_uses_flash_above_threshold():
+    """gqa_forward at S >= FLASH_THRESHOLD equals the dense path result."""
+    spec = A.AttnSpec(num_heads=4, num_kv_heads=2, head_dim=16)
+    p = A.init_gqa(jax.random.PRNGKey(0), 64, spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (1, A.FLASH_THRESHOLD, 64)) * 0.1
+    out_flash = A.gqa_forward(p, spec, x)
+
+    import repro.models.attention as mod
+    old = mod.FLASH_THRESHOLD
+    try:
+        mod.FLASH_THRESHOLD = 10**9          # force dense path
+        out_dense = A.gqa_forward(p, spec, x)
+    finally:
+        mod.FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_mla_forward_flash_matches_dense():
+    spec = A.MLASpec(num_heads=4, q_lora_rank=32, kv_lora_rank=16,
+                     nope_dim=24, rope_dim=8, v_head_dim=16)
+    p = A.init_mla(jax.random.PRNGKey(0), 64, spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 64)) * 0.1
+
+    import repro.models.attention as mod
+    old = mod.FLASH_THRESHOLD
+    try:
+        mod.FLASH_THRESHOLD = 32             # force flash at S=64
+        out_flash = A.mla_forward(p, spec, x)
+        mod.FLASH_THRESHOLD = 10**9
+        out_dense = A.mla_forward(p, spec, x)
+    finally:
+        mod.FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_flash_cross_attention_ragged_kv():
+    """Cross-attention via flash (causal=False, T != S, ragged T=1500-like)
+    must match dense attend — the whisper path."""
+    b, s, t, h, hd = 1, 128, 94, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, t, h, hd))
+    v = jax.random.normal(ks[2], (b, t, h, hd))
+    scale = hd ** -0.5
+    flash = A.flash_attention(q, k, v, scale, causal=False,
+                              q_chunk=32, kv_chunk=32)
+    dense = A.attend(q, k, v, None, scale)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense), **TOL)
+
+
+def test_gqa_forward_cross_flash_matches_dense():
+    """gqa_forward cross-attention routes through flash above the size
+    threshold and must equal the dense path."""
+    spec = A.AttnSpec(num_heads=4, num_kv_heads=4, head_dim=16,
+                      causal=False, use_rope=False)
+    p = A.init_gqa(jax.random.PRNGKey(0), 64, spec, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 64)) * 0.1
+    mem = jax.random.normal(jax.random.PRNGKey(2), (1, 100, 64)) * 0.1
+
+    import repro.models.attention as mod
+    old = mod.FLASH_THRESHOLD
+    try:
+        mod.FLASH_THRESHOLD = 64           # 256*100 >= 64^2 -> flash
+        out_flash = A.gqa_forward(p, spec, x, kv_x=mem)
+        mod.FLASH_THRESHOLD = 10**9        # force dense
+        out_dense = A.gqa_forward(p, spec, x, kv_x=mem)
+    finally:
+        mod.FLASH_THRESHOLD = old
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               rtol=5e-4, atol=5e-4)

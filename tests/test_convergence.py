@@ -1,0 +1,82 @@
+"""Tests for Theorem 1 / Eq. (11) (paper §III-A)."""
+
+import numpy as np
+import pytest
+
+from repro.core.convergence import ConvergenceBound, RoundTracker, SmoothnessParams
+
+
+@pytest.fixture
+def bound():
+    return ConvergenceBound(SmoothnessParams(), np.array([30.0, 40.0, 50.0]))
+
+
+def test_d_requires_xi2_below_eighth():
+    assert SmoothnessParams(xi2=0.0).d == pytest.approx(1.0)
+    assert SmoothnessParams(xi2=0.1).d == pytest.approx(0.2)
+    with pytest.raises(ValueError):
+        _ = SmoothnessParams(xi2=0.2).d
+
+
+def test_initial_term_vanishes_with_rounds(bound):
+    """First Theorem-1 term is O(1/S)."""
+    t10 = bound.initial_term(10)
+    t1000 = bound.initial_term(1000)
+    assert t1000 < t10
+    assert bound.initial_term(10**9) < 1e-6
+    # exact: 2 beta gap / (d (S+1))
+    p = bound.params
+    assert t10 == pytest.approx(2 * p.beta * p.initial_gap / (p.d * 11))
+
+
+def test_bound_monotone_in_per_and_prune(bound):
+    z = np.zeros(3)
+    base = bound.bound(100, z, z)
+    worse_per = bound.bound(100, np.full(3, 0.2), z)
+    worse_rho = bound.bound(100, z, np.full(3, 0.2))
+    assert worse_per > base and worse_rho > base
+    # linearity in each argument
+    assert bound.bound(100, np.full(3, 0.4), z) - base == pytest.approx(
+        2 * (worse_per - base))
+
+
+def test_samples_weighting(bound):
+    """Clients with more samples dominate: K_i (PER term), K_i^2 (pruning)."""
+    e0 = np.array([0.3, 0.0, 0.0])
+    e2 = np.array([0.0, 0.0, 0.3])
+    assert bound.packet_error_term(e2) > bound.packet_error_term(e0)
+    assert bound.packet_error_term(e2) / bound.packet_error_term(e0) == \
+        pytest.approx(50.0 / 30.0)
+    assert bound.pruning_term(e2) / bound.pruning_term(e0) == \
+        pytest.approx((50.0 / 30.0) ** 2)
+
+
+def test_gamma_eq11(bound):
+    """gamma = psi + m sum_i K_i (q_i + K_i rho_i)."""
+    q = np.array([0.1, 0.2, 0.05])
+    rho = np.array([0.5, 0.0, 0.7])
+    k = np.array([30.0, 40.0, 50.0])
+    expected = bound.psi(200) + bound.m * np.sum(k * (q + k * rho))
+    assert bound.gamma(q, rho, 200) == pytest.approx(expected)
+
+
+def test_m_is_max_of_two_coefficients(bound):
+    p = bound.params
+    k_total = 120.0
+    c1 = 8 * p.xi1 / (p.d * k_total)
+    c2 = 2 * p.beta**2 * 3 * p.weight_bound**2 / (p.d * k_total**2)
+    assert bound.m == pytest.approx(max(c1, c2))
+
+
+def test_round_tracker_averages():
+    tr = RoundTracker(2)
+    tr.record(np.array([0.1, 0.3]), np.array([0.5, 0.0]))
+    tr.record(np.array([0.3, 0.1]), np.array([0.0, 0.5]))
+    np.testing.assert_allclose(tr.avg_per, [0.2, 0.2])
+    np.testing.assert_allclose(tr.avg_prune, [0.25, 0.25])
+    assert tr.rounds == 2
+
+
+def test_zero_samples_rejected():
+    with pytest.raises(ValueError):
+        ConvergenceBound(SmoothnessParams(), np.array([0.0, 10.0]))

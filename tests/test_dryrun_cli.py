@@ -1,0 +1,26 @@
+"""Subprocess smoke of the dry-run CLI: the 512-placeholder-device path
+cannot run inside this pytest process (device count locks at first jax
+init), so one real combo is exercised via the actual entry point."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("args", [
+    ["--arch", "smollm-135m", "--shape", "decode_32k"],
+    ["--arch", "xlstm-125m", "--shape", "long_500k", "--multi-pod"],
+])
+def test_dryrun_cli_smoke(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=600, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "0 failed" in out.stdout
+    assert "OK" in out.stdout

@@ -1,0 +1,258 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels import block_norms as _bn
+from repro.kernels import block_sparse_matmul as _bsm
+from repro.kernels import decode_attention as _da
+
+# fp32 matmul tolerance allows for accumulation-order differences between
+# the tiled kernel (per-block partial sums) and the single jnp.dot oracle
+TOLS = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+# ---------------------------------------------------------------------------
+# block_sparse_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 512),
+                                   (64, 256, 128), (128, 512, 256)])
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_bsm_shapes(m, k, n, density):
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(m + k + n), 3)
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    mk, mn = k // 128, n // 128
+    mask = (jax.random.uniform(km, (mk, mn)) < density).astype(jnp.float32)
+    bm = min(128, m)
+    y = _bsm.block_sparse_matmul(x, w, mask, bm, 128, 128, interpret=True)
+    yr = ref.block_sparse_matmul(x, w, mask, 128, 128)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **TOLS[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsm_dtypes(dtype):
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(kx, (128, 256)).astype(dtype)
+    w = jax.random.normal(kw, (256, 256)).astype(dtype)
+    mask = (jax.random.uniform(km, (2, 2)) < 0.5).astype(jnp.float32)
+    y = _bsm.block_sparse_matmul(x, w, mask, 128, 128, 128, interpret=True)
+    yr = ref.block_sparse_matmul(x, w, mask, 128, 128)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **TOLS[dtype])
+
+
+def test_bsm_empty_mask_is_zero():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((128, 128))
+    y = _bsm.block_sparse_matmul(x, w, jnp.zeros((1, 1)), 128, 128, 128,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(y), 0.0)
+
+
+def test_masked_matmul_wrapper_pads_and_batches():
+    """Public ops.masked_matmul: ragged shapes + leading batch dims."""
+    kx, kw, km = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(kx, (3, 50, 200))       # batched, ragged
+    w = jax.random.normal(kw, (200, 300))
+    mask = (jax.random.uniform(km, (2, 3)) < 0.7).astype(jnp.float32)
+    y = ops.masked_matmul(x, w, mask)
+    wp = jnp.pad(w, ((0, 56), (0, 84)))
+    yr = ref.block_sparse_matmul(
+        jnp.pad(x.reshape(-1, 200), ((0, 0), (0, 56))), wp, mask, 128, 128)
+    yr = yr[:, :300].reshape(3, 50, 300)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_masked_matmul_equals_dense_when_full():
+    kx, kw = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (64, 256))
+    w = jax.random.normal(kw, (256, 128))
+    y = ops.masked_matmul(x, w, jnp.ones((2, 1)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# block_norms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n,bk,bn", [(128, 128, 128, 128),
+                                       (256, 512, 128, 128),
+                                       (384, 256, 128, 256),
+                                       (512, 384, 256, 128)])
+def test_block_norms_shapes(k, n, bk, bn):
+    w = jax.random.normal(jax.random.PRNGKey(k + n), (k, n))
+    out = _bn.block_norms(w, bk, bn, interpret=True)
+    expect = ref.block_norms(w, bk, bn)
+    assert out.shape == (k // bk, n // bn)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_norms_dtypes(dtype):
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256)).astype(dtype)
+    out = _bn.block_norms(w, 128, 128, interpret=True)
+    expect = ref.block_norms(w, 128, 128)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), rtol=2e-2)
+
+
+def test_tile_norms_wrapper_ragged():
+    w = jax.random.normal(jax.random.PRNGKey(0), (200, 300))
+    out = ops.tile_norms(w)
+    assert out.shape == (2, 3)
+    wp = jnp.pad(w, ((0, 56), (0, 84)))
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.block_norms(wp, 128, 128)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_block_norms_match_pruning_module():
+    """kernels/block_norms == core.pruning.block_l2_norms (mask source)."""
+    from repro.core.pruning import block_l2_norms
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 384))
+    a = ops.tile_norms(w, 128, 128)
+    b = block_l2_norms(w, block=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,hd,s", [(2, 4, 2, 64, 128),
+                                          (1, 8, 1, 64, 512),
+                                          (4, 4, 4, 128, 256),
+                                          (2, 16, 8, 64, 384)])
+def test_decode_attention_shapes(b, h, hkv, hd, s):
+    ks = jax.random.split(jax.random.PRNGKey(b * h + s), 4)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    pos = jax.random.randint(ks[3], (b,), 0, s)
+    out = ops.flash_decode(q, k, v, pos, block_s=128)
+    expect = ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 100, 256])
+def test_decode_attention_windowed(window):
+    ks = jax.random.split(jax.random.PRNGKey(window), 4)
+    b, h, hkv, hd, s = 2, 4, 2, 64, 256
+    q = jax.random.normal(ks[0], (b, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    pos = jnp.asarray([s - 1, s // 2])
+    out = ops.flash_decode(q, k, v, pos, block_s=128, window=window)
+    expect = ref.decode_attention(q, k, v, pos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (2, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 128, 2, 64)).astype(dtype)
+    pos = jnp.asarray([100, 60])
+    out = ops.flash_decode(q, k, v, pos, block_s=128)
+    expect = ref.decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_decode_attention_pos_zero():
+    """Only the first key visible at pos=0."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64))
+    k = jax.random.normal(ks[1], (1, 128, 1, 64))
+    v = jax.random.normal(ks[2], (1, 128, 1, 64))
+    out = ops.flash_decode(q, k, v, jnp.zeros((1,), jnp.int32), block_s=128)
+    np.testing.assert_allclose(np.asarray(out)[0, 0], np.asarray(v)[0, 0, 0],
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,hkv,hd", [(1, 128, 4, 2, 64),
+                                          (2, 256, 8, 2, 64),
+                                          (1, 512, 4, 1, 128),
+                                          (2, 128, 4, 4, 64)])
+def test_flash_prefill_causal(b, s, h, hkv, hd):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    out = ops.flash_prefill(q, k, v, block_q=64, block_s=64)
+    expect = ref.prefill_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_prefill_windowed(window):
+    b, s, h, hkv, hd = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    out = ops.flash_prefill(q, k, v, window=window, block_q=64, block_s=64)
+    expect = ref.prefill_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_cross_ragged():
+    """causal=False with T != S and ragged T (whisper cross-attention)."""
+    b, s, t, h, hd = 1, 128, 94, 4, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, t, h, hd))
+    v = jax.random.normal(ks[2], (b, t, h, hd))
+    out = ops.flash_prefill(q, k, v, causal=False, block_q=64, block_s=64)
+    expect = ref.prefill_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_dtypes(dtype):
+    b, s, h, hkv, hd = 1, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd)).astype(dtype)
+    out = ops.flash_prefill(q, k, v, block_q=64, block_s=64)
+    expect = ref.prefill_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_prefill_matches_model_flash():
+    """Pallas kernel == the pure-JAX chunked flash in models/attention."""
+    from repro.models import attention as A
+    b, s, h, hkv, hd = 1, 256, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    kern = ops.flash_prefill(q, k, v, block_q=64, block_s=64)
+    jaxflash = A.flash_attention(q, k, v, hd ** -0.5, causal=True,
+                                 q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(jaxflash),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,117 @@
+"""Tests for launch/shardings.py policy logic (pure pspec reasoning — a
+1-device mesh suffices; the dry-run exercises the real 256/512-chip
+meshes)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import shardings as SH
+
+
+class FakeMesh:
+    """Duck-typed mesh: shape mapping + axis_names (param_pspec only reads
+    those)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_megatron_orientation_w_in():
+    """(d, ff) with ff larger: ff -> model (column parallel)."""
+    spec = SH.param_pspec("stages/0/b0/ffn/w_in/w", (3584, 18944), MESH)
+    assert spec == P("data", "model")
+
+
+def test_megatron_orientation_w_out():
+    """(ff, d) with ff larger: ff -> model (row parallel) — the
+    contraction dim stays on the tensor axis for BOTH mlp matmuls."""
+    spec = SH.param_pspec("stages/0/b0/ffn/w_out/w", (18944, 3584), MESH)
+    assert spec == P("model", "data")
+
+
+def test_square_tie_keeps_data_model():
+    spec = SH.param_pspec("stages/0/b0/attn/wq/w", (3584, 3584), MESH)
+    assert spec == P("data", "model")
+
+
+def test_embedding_vocab_over_model():
+    spec = SH.param_pspec("embed/embedding", (152064, 3584), MESH)
+    assert spec == P("model", "data")
+
+
+def test_expert_parallel_when_divisible():
+    """(L, E, d, f) with E % model == 0: experts over model."""
+    spec = SH.param_pspec("stages/0/b0/ffn/w_in", (16, 64, 2048, 1024), MESH)
+    assert spec[1] == "model"
+    assert spec[0] is None          # layer-stack dim never sharded
+    # fsdp lands on the larger of the weight dims
+    assert spec[2] == "data" and spec[3] is None
+
+
+def test_expert_fallback_when_indivisible():
+    """grok: 8 experts on a 16 axis -> Megatron rule on last two dims."""
+    spec = SH.param_pspec("stages/0/b0/ffn/w_in", (64, 8, 6144, 32768), MESH)
+    assert spec[1] is None
+    assert spec[-1] == "model"      # ff (larger) on the tensor axis
+
+
+def test_fsdp_false_drops_data_axis():
+    spec = SH.param_pspec("stages/0/b0/ffn/w_out/w", (18944, 3584), MESH,
+                          fsdp=False)
+    assert spec == P("model", None)
+    espec = SH.param_pspec("embed/embedding", (152064, 3584), MESH,
+                           fsdp=False)
+    assert espec == P("model", None)
+
+
+def test_indivisible_dims_unsharded():
+    spec = SH.param_pspec("x/w", (9, 7), MESH)
+    assert spec == P(None, None)
+
+
+def test_serving_fsdp_needed_thresholds():
+    small = {"w": jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)}
+    assert not SH.serving_fsdp_needed(small, MESH)
+    # 314B bf16 / 16 = 39 GiB > 12 GiB budget
+    big = {"w": jax.ShapeDtypeStruct((314_000, 1_000_000), jnp.bfloat16)}
+    assert SH.serving_fsdp_needed(big, MESH)
+
+
+def test_axis_size_and_constrain_no_rules():
+    from repro.models import sharding as MS
+    assert MS.axis_size("q_stripes") == 1      # no rules installed
+    x = jnp.ones((4, 4))
+    assert MS.constrain(x, "batch", "embed") is x   # no-op without rules
+
+
+def test_constrain_all_dropped_is_noop():
+    """If every rule axis fails the divisibility guard, no constraint is
+    applied (an empty P() would force replication).  A >1-sized fake mesh
+    exercises the guard; the final None-only check uses the real API."""
+    from repro.models import sharding as MS
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with MS.use_rules(dict(MS.DEFAULT_RULES), mesh):
+        x = jnp.ones((4, 4))
+        # all logical names map to None-able axes -> pure no-op path
+        y = MS.constrain(x, None, None)
+        assert y is x
+        # rule axes survive on a 1-sized mesh (1 divides everything) but
+        # the constraint is semantically replication-free
+        z = MS.constrain(x, "batch", "mlp")
+        assert z.shape == x.shape
+
+    class Fake:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    with MS.use_rules(dict(MS.DEFAULT_RULES), Fake()):
+        x = jnp.ones((3, 5))        # nothing divides a 16-wide axis
+        y = MS.constrain(x, "batch", "mlp")
+        assert y is x               # empty spec -> returned unchanged

@@ -1,0 +1,62 @@
+"""System-level behaviour: the paper's end-to-end claims on this codebase.
+
+These are the integration tests for the three §V claims:
+  (i)  proposed scheme beats GBA/FPR on total cost,
+  (ii) higher pruning rate -> lower latency but worse accuracy/bound,
+  (iii) packet error + pruning terms both appear in the realized bound.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import tradeoff as T
+from repro.federated import system
+
+from conftest import make_problem
+
+
+def test_claim_cost_ordering():
+    """(i) averaged over channel draws: proposed <= GBA, FPR."""
+    ours, gba, fpr0, fpr7 = [], [], [], []
+    for seed in range(8):
+        prob = make_problem(seed=seed)
+        ours.append(T.solve_alternating(prob).total_cost)
+        gba.append(T.solve_gba(prob).total_cost)
+        fpr0.append(T.solve_fpr(prob, 0.0).total_cost)
+        fpr7.append(T.solve_fpr(prob, 0.7).total_cost)
+    assert np.mean(ours) <= np.mean(gba)
+    assert np.mean(ours) <= np.mean(fpr0)
+    assert np.mean(ours) <= np.mean(fpr7)
+
+
+def test_claim_pruning_latency_accuracy_tradeoff():
+    """(ii) FPR 0.7 is faster but converges worse than FPR 0.0 (Fig. 5)."""
+    r_none = system.run(system.FLConfig(rounds=40, scheme="fpr:0.0",
+                                        eval_every=40, lr=5e-3))
+    r_high = system.run(system.FLConfig(rounds=40, scheme="fpr:0.7",
+                                        eval_every=40, lr=5e-3))
+    # pruning reduces per-round FL latency ...
+    assert np.mean(r_high.latencies) < np.mean(r_none.latencies)
+    # ... but worsens the realized Theorem-1 bound
+    assert r_high.bound_final > r_none.bound_final
+    # ... and the training loss it reaches
+    assert r_high.losses[-1] >= r_none.losses[-1] - 1e-3
+
+
+def test_claim_bound_terms_realized():
+    """(iii) realized averages feed Theorem 1; ideal has the smallest bound."""
+    r_ideal = system.run(system.FLConfig(rounds=10, scheme="ideal"))
+    r_prop = system.run(system.FLConfig(rounds=10, scheme="proposed"))
+    r_fpr7 = system.run(system.FLConfig(rounds=10, scheme="fpr:0.7"))
+    assert r_ideal.bound_final <= r_prop.bound_final <= r_fpr7.bound_final
+
+
+def test_accuracy_ordering_long_run():
+    """Fig. 5/6 ordering (averaged trend): ideal >= proposed >= fpr-0.7."""
+    accs = {}
+    for scheme in ("ideal", "proposed", "fpr:0.7"):
+        res = system.run(system.FLConfig(rounds=60, scheme=scheme,
+                                         eval_every=60, lr=5e-3, seed=1))
+        accs[scheme] = res.accuracy[-1][1]
+    assert accs["ideal"] >= accs["fpr:0.7"] - 0.02
+    assert accs["proposed"] >= accs["fpr:0.7"] - 0.02

@@ -1,0 +1,200 @@
+"""Property + unit tests for the trade-off optimizer (paper §IV, Alg. 1).
+
+Hypothesis drives the problem instance (channel seed, lambda, client count);
+the invariants under test are the paper's own lemmas/propositions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tradeoff as T
+from repro.core import wireless as W
+
+from conftest import make_problem
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1 / bisection machinery
+# ---------------------------------------------------------------------------
+
+@given(st.floats(1e5, 1e9), st.floats(0.01, 1.0), st.floats(1e-12, 1e-8))
+@settings(**SETTINGS)
+def test_bisection_inverts_rate(target, p, h):
+    """R^u(B*) == target for feasible targets (Eq. 21)."""
+    n0 = W.dbm_to_watt(-174.0)
+    ceiling = p * h / (n0 * np.log(2.0))
+    bw = T.min_bandwidth_for_rates(np.array([target]), np.array([p]),
+                                   np.array([h]), n0)[0]
+    if target >= ceiling:
+        assert np.isinf(bw)
+    else:
+        r = W.uplink_rate(np.array([bw]), p, h, n0)[0]
+        assert r == pytest.approx(target, rel=1e-6)
+
+
+def test_bisection_zero_target():
+    bw = T.min_bandwidth_for_rates(np.array([0.0]), np.array([0.2]),
+                                   np.array([1e-10]), 1e-20)
+    assert bw[0] == 0.0
+
+
+@given(st.integers(0, 50))
+@settings(**SETTINGS)
+def test_prune_rates_satisfy_deadline(seed):
+    """Eq. (16) rates are the minimum meeting t_c + t_u <= t~."""
+    prob = make_problem(seed=seed)
+    bw = np.full(prob.num_clients, prob.cfg.bandwidth_hz / prob.num_clients)
+    deadline, rho = T.solve_pruning(prob, bw)
+    assert np.all(rho >= -1e-12) and np.all(rho <= prob.max_prune + 1e-12)
+    r_u = prob.uplink_rates(bw)
+    t_total = (prob.compute_latency(rho)
+               + W.upload_latency(prob.cfg, rho, r_u))
+    assert np.all(t_total <= deadline * (1 + 1e-9))
+
+
+@given(st.integers(0, 50), st.floats(1e-5, 0.3))
+@settings(**SETTINGS)
+def test_proposition1_beats_deadline_grid(seed, lam):
+    """Prop. 1's closed-form t~* is optimal for (17): no grid deadline has
+    lower inner cost with its Eq.-(16) minimal pruning rates."""
+    prob = make_problem(seed=seed, weight=lam)
+    bw = np.full(prob.num_clients, prob.cfg.bandwidth_hz / prob.num_clients)
+    t_star, rho_star = T.solve_pruning(prob, bw)
+
+    def g(t):
+        rho = np.minimum(T.prune_rates_for_deadline(
+            prob.no_prune_latency(bw), t), prob.max_prune)
+        k = prob.num_samples
+        return (1 - lam) * t + lam * prob.bound.m * np.sum(k**2 * rho)
+
+    t_np = prob.no_prune_latency(bw)
+    t_min = float(np.max(t_np * (1 - prob.max_prune)))
+    t_max = float(np.max(t_np))
+    grid = np.linspace(t_min, t_max, 2048)
+    best_grid = min(g(t) for t in grid)
+    assert g(t_star) <= best_grid + 1e-9 * max(abs(best_grid), 1.0)
+
+
+@given(st.integers(0, 50))
+@settings(**SETTINGS)
+def test_bandwidth_meets_deadline_with_margin(seed):
+    """Eq. (21): allocated bandwidth exactly meets the latency constraint."""
+    prob = make_problem(seed=seed)
+    rho = np.full(prob.num_clients, 0.3)
+    deadline = float(np.max(prob.no_prune_latency(
+        np.full(prob.num_clients, prob.cfg.bandwidth_hz / prob.num_clients)))) * 0.8
+    bw = T.solve_bandwidth(prob, rho, deadline)
+    if not np.all(np.isfinite(bw)):
+        return  # infeasible deadline for this channel draw: nothing to check
+    r_u = prob.uplink_rates(bw)
+    t_total = prob.compute_latency(rho) + W.upload_latency(prob.cfg, rho, r_u)
+    assert np.all(t_total <= deadline * (1 + 1e-6))
+    # minimality: 1% less bandwidth violates the deadline for active clients
+    active = bw > 1e-3
+    if np.any(active):
+        r_less = prob.uplink_rates(bw * 0.99)
+        t_less = prob.compute_latency(rho) + W.upload_latency(prob.cfg, rho, r_less)
+        assert np.all(t_less[active] >= t_total[active])
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 end-to-end
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 30), st.sampled_from([1e-4, 4e-4, 1e-3, 1e-2]))
+@settings(**SETTINGS)
+def test_alternating_feasible_lemma2(seed, lam):
+    """Lemma 2: the converged allocation satisfies sum B_i <= B."""
+    prob = make_problem(seed=seed, weight=lam)
+    sol = T.solve_alternating(prob)
+    assert sol.feasible
+    assert np.sum(sol.bandwidth) <= prob.cfg.bandwidth_hz * (1 + 1e-6)
+    assert np.all((sol.prune >= -1e-12) & (sol.prune <= 0.7 + 1e-12))
+    assert np.all((sol.per >= 0) & (sol.per < 1))
+
+
+@given(st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_alternating_cost_monotone_nonincreasing(seed):
+    """Each Alg.-1 iteration cannot increase the inner cost."""
+    prob = make_problem(seed=seed)
+    bw = np.full(prob.num_clients, prob.cfg.bandwidth_hz / prob.num_clients)
+    costs = []
+    for _ in range(8):
+        deadline, rho = T.solve_pruning(prob, bw)
+        bw = T.solve_bandwidth(prob, rho, deadline)
+        costs.append(prob.inner_cost(deadline, bw, rho))
+    diffs = np.diff(costs)
+    assert np.all(diffs <= 1e-9 * np.maximum(np.abs(costs[:-1]), 1.0))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_proposed_beats_benchmarks(seed):
+    """Paper Fig. 2/3: proposed <= GBA and <= every FPR on total cost."""
+    prob = make_problem(seed=seed)
+    ours = T.solve_alternating(prob).total_cost
+    assert ours <= T.solve_gba(prob).total_cost * (1 + 1e-9)
+    for rate in (0.0, 0.35, 0.7):
+        assert ours <= T.solve_fpr(prob, rate).total_cost * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_proposed_close_to_exhaustive(seed):
+    """Proposed tracks the (refined-grid) exhaustive-search oracle."""
+    prob = make_problem(seed=seed)
+    ours = T.solve_alternating(prob).total_cost
+    oracle = T.solve_exhaustive(prob, rho_grid=5, deadline_grid=24,
+                                refine=3).total_cost
+    # within 5% of the oracle (grid refinement noise allowed either way)
+    assert ours <= oracle * 1.05
+
+
+def test_lambda_tradeoff_direction():
+    """Fig. 4: larger lambda -> learning cost falls, latency rises."""
+    lams = [1e-5, 4e-4, 1e-2]
+    lat, learn = [], []
+    for lam in lams:
+        # average over channel draws to beat fading noise
+        ls, gs = [], []
+        for seed in range(6):
+            prob = make_problem(seed=seed, weight=lam)
+            sol = T.solve_alternating(prob)
+            ls.append(sol.deadline)
+            gs.append(prob.bound.learning_cost(sol.per, sol.prune))
+        lat.append(np.mean(ls))
+        learn.append(np.mean(gs))
+    assert learn[0] >= learn[-1]
+    assert lat[-1] >= lat[0]
+
+
+def test_ideal_has_zero_prune_and_per():
+    prob = make_problem()
+    sol = T.solve_ideal(prob)
+    np.testing.assert_allclose(sol.prune, 0.0)
+    np.testing.assert_allclose(sol.per, 0.0)
+
+
+def test_higher_power_lowers_cost():
+    """Fig. 2 trend: total cost decreases with max transmit power."""
+    costs = []
+    for dbm in (13.0, 23.0, 33.0):
+        vals = []
+        for seed in range(5):
+            cfg = W.WirelessConfig(tx_power_ue_w=W.dbm_to_watt(dbm))
+            prob = make_problem(seed=seed, cfg=cfg)
+            vals.append(T.solve_alternating(prob).total_cost)
+        costs.append(np.mean(vals))
+    assert costs[0] > costs[1] > costs[2]
+
+
+def test_larger_model_raises_cost():
+    """Fig. 3 trend: total cost increases with model size D_M."""
+    costs = []
+    for bits in (0.4e6, 1.6e6, 6.4e6):
+        cfg = W.WirelessConfig(model_bits=bits)
+        prob = make_problem(seed=0, cfg=cfg)
+        costs.append(T.solve_alternating(prob).total_cost)
+    assert costs[0] < costs[1] < costs[2]

@@ -1,0 +1,126 @@
+"""Unit tests for the wireless channel / latency substrate (paper §II-A)."""
+
+import numpy as np
+import pytest
+
+from repro.core import wireless as W
+
+
+def test_dbm_conversions():
+    assert W.dbm_to_watt(0.0) == pytest.approx(1e-3)
+    assert W.dbm_to_watt(30.0) == pytest.approx(1.0)
+    assert W.db_to_linear(0.0) == pytest.approx(1.0)
+    assert W.db_to_linear(10.0) == pytest.approx(10.0)
+
+
+def test_table1_defaults(table1_cfg):
+    assert table1_cfg.bandwidth_hz == 15e6
+    assert table1_cfg.model_bits == 1.6e6
+    assert table1_cfg.cycles_per_sample == pytest.approx(0.168e9)
+    assert table1_cfg.tx_power_ue_w == pytest.approx(W.dbm_to_watt(23.0))
+    assert table1_cfg.noise_psd_w_per_hz == pytest.approx(W.dbm_to_watt(-174.0))
+
+
+def test_uplink_rate_monotone_in_bandwidth():
+    """Lemma 1: R_i^u(B_i) strictly increasing."""
+    b = np.geomspace(1e3, 1e8, 64)
+    r = W.uplink_rate(b, 0.2, 1e-10, W.dbm_to_watt(-174.0))
+    assert np.all(np.diff(r) > 0)
+
+
+def test_uplink_rate_zero_bandwidth():
+    assert W.uplink_rate(np.array([0.0]), 0.2, 1e-10, 1e-20)[0] == 0.0
+
+
+def test_uplink_rate_capacity_ceiling():
+    """lim B->inf of B log2(1+ph/(B N0)) = p h / (N0 ln 2)."""
+    p, h, n0 = 0.2, 1e-10, W.dbm_to_watt(-174.0)
+    ceiling = p * h / (n0 * np.log(2.0))
+    r = W.uplink_rate(np.array([1e15]), p, h, n0)[0]
+    assert r < ceiling
+    assert r == pytest.approx(ceiling, rel=1e-3)
+
+
+def test_per_monotone_and_bounded():
+    """Lemma 1: q_i(B_i) increasing; q in [0, 1)."""
+    b = np.geomspace(1e3, 1e9, 64)
+    q = W.packet_error_rate(b, 0.2, 1e-10, W.dbm_to_watt(-174.0),
+                            W.db_to_linear(0.023))
+    assert np.all(np.diff(q) > 0)
+    assert np.all((q >= 0.0) & (q < 1.0))
+    assert W.packet_error_rate(np.array([0.0]), 0.2, 1e-10, 1e-20, 1.0)[0] == 0.0
+
+
+def test_per_decreasing_in_power_and_gain():
+    b, n0, m0 = 1e6, W.dbm_to_watt(-174.0), W.db_to_linear(0.023)
+    q_low = W.packet_error_rate(b, 0.1, 1e-10, n0, m0)
+    q_high = W.packet_error_rate(b, 0.4, 1e-10, n0, m0)
+    assert q_high < q_low
+    q_weak = W.packet_error_rate(b, 0.2, 1e-11, n0, m0)
+    q_strong = W.packet_error_rate(b, 0.2, 1e-9, n0, m0)
+    assert q_strong < q_weak
+
+
+def test_training_latency_eq2(table1_cfg):
+    """t_i^c = (1-rho) K d^c / f."""
+    t = W.training_latency(table1_cfg, np.array([0.0, 0.5]),
+                           np.array([50, 50]), np.array([5e9, 5e9]))
+    expect = 50 * 0.168e9 / 5e9
+    assert t[0] == pytest.approx(expect)
+    assert t[1] == pytest.approx(0.5 * expect)
+
+
+def test_upload_latency_scales_with_pruning(table1_cfg):
+    r = np.array([1e6, 1e6])
+    t = W.upload_latency(table1_cfg, np.array([0.0, 0.7]), r)
+    assert t[0] == pytest.approx(1.6)          # 1.6 Mbit / 1 Mbps
+    assert t[1] == pytest.approx(0.3 * 1.6)
+    assert np.isinf(W.upload_latency(table1_cfg, np.array([0.0]),
+                                     np.array([0.0]))[0])
+
+
+def test_round_latency_is_max_over_clients(table1_cfg):
+    h_down = np.array([1e-9, 1e-9])
+    h_up = np.array([1e-9, 1e-12])      # client 1 has terrible uplink
+    rho = np.zeros(2)
+    bw = np.array([7.5e6, 7.5e6])
+    p = np.full(2, table1_cfg.tx_power_ue_w)
+    k = np.array([30.0, 30.0])
+    f = np.full(2, 5e9)
+    t = W.round_latency(table1_cfg, h_down, rho, bw, p, h_up, k, f)
+    r_u = W.uplink_rate(bw, p, h_up, table1_cfg.noise_psd_w_per_hz)
+    per_client = (W.broadcast_latency(table1_cfg, h_down)
+                  + W.training_latency(table1_cfg, rho, k, f)
+                  + W.upload_latency(table1_cfg, rho, r_u)
+                  + table1_cfg.aggregation_latency_s)
+    assert t == pytest.approx(np.max(per_client))
+    assert np.argmax(per_client) == 1
+
+
+def test_channel_reproducible():
+    a1, b1 = W.Channel(5, seed=7).sample_gains()
+    a2, b2 = W.Channel(5, seed=7).sample_gains()
+    np.testing.assert_allclose(a1, a2)
+    np.testing.assert_allclose(b1, b2)
+    a3, _ = W.Channel(5, seed=8).sample_gains()
+    assert not np.allclose(a1, a3, rtol=1e-3, atol=0.0)
+
+
+def test_channel_gains_positive():
+    h_up, h_down = W.Channel(64, seed=1).sample_gains()
+    assert np.all(h_up > 0) and np.all(h_down > 0)
+    # path loss at 50..500m in the urban model: gains are tiny (< 1e-7)
+    assert np.all(h_up < 1e-6)
+
+
+def test_retransmission_model():
+    """Beyond-paper ablation support: q_eff = q^(R+1), E[tries] monotone."""
+    q = np.array([0.0, 0.01, 0.5])
+    np.testing.assert_allclose(W.effective_per(q, 0), q)
+    np.testing.assert_allclose(W.effective_per(q, 1), q ** 2)
+    t0 = W.expected_tries(q, 0)
+    t2 = W.expected_tries(q, 2)
+    np.testing.assert_allclose(t0, 1.0)
+    assert np.all(t2 >= t0)
+    # geometric sum check at q=0.5, R=2: 1 + 0.5 + 0.25
+    assert t2[2] == pytest.approx(1.75)
