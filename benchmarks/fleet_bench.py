@@ -1,0 +1,103 @@
+"""Fleet engine throughput: rounds/sec vs client count.
+
+Measures the scan-compiled round loop end-to-end (channel sample ->
+closed-form solver -> masked-gradient FedSGD -> packet-error aggregation
+-> tracking) with compile time reported separately, sweeping the fleet
+from the paper's 5 UEs up to 100k clients.  The solver runs *inside* the
+scan — zero per-round host work — so rounds/sec is the compiled-program
+number the ROADMAP north star cares about.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench            # default sweep
+  PYTHONPATH=src python -m benchmarks.fleet_bench --clients 5,1000,10000
+  PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # CI-sized
+
+Writes ``fleet_bench.csv`` via the shared benchmark plumbing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.fleet import FleetConfig, FleetTopology
+from repro.fleet.engine import build_simulation
+
+
+def _fleet_shape(clients: int) -> tuple[int, int]:
+    """Factor a client count into (cells, clients_per_cell), near-square
+    but capping cell size at 256 so the per-cell solver stays cache-sized."""
+    if clients <= 8:
+        return 1, clients
+    per_cell = min(256, int(math.sqrt(clients)))
+    while clients % per_cell:
+        per_cell -= 1
+    return clients // per_cell, per_cell
+
+
+def bench_one(clients: int, rounds: int, seed: int = 0) -> dict:
+    cells, per_cell = _fleet_shape(clients)
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
+        rounds=rounds, seed=seed,
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+
+    sim = build_simulation(cfg)
+    t0 = time.perf_counter()
+    out = sim.simulate(sim.params, sim.round_keys)   # compile + run
+    jax.block_until_ready(out)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = sim.simulate(sim.params, sim.round_keys)   # compiled executable
+    jax.block_until_ready(out)
+    warm = time.perf_counter() - t0
+    res = sim.finalize(*out)
+
+    assert np.all(np.isfinite(res.losses)), "non-finite losses at scale"
+    return {
+        "clients": clients,
+        "cells": cells,
+        "rounds": rounds,
+        "compile_s": cold - warm,
+        "run_s": warm,
+        "rounds_per_s": rounds / warm,
+        "client_rounds_per_s": clients * rounds / warm,
+        "final_loss": float(res.losses[-1]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", default="5,100,1000,10000",
+                    help="comma-separated client counts (try up to 100000)")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 2 tiny fleets, 3 rounds")
+    args = ap.parse_args()
+
+    if args.smoke:
+        counts, rounds = [16, 64], 3
+    else:
+        counts = [int(c) for c in args.clients.split(",")]
+        rounds = args.rounds
+
+    header = ["clients", "cells", "rounds", "compile_s", "run_s",
+              "rounds_per_s", "client_rounds_per_s", "final_loss"]
+    rows = []
+    for clients in counts:
+        r = bench_one(clients, rounds)
+        rows.append([r[h] for h in header])
+        print(f"clients={clients:>7d} cells={r['cells']:>4d} "
+              f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
+              f"{r['rounds_per_s']:8.2f} rounds/s "
+              f"{r['client_rounds_per_s']:12.0f} client-rounds/s")
+    path = common.write_csv("fleet_bench.csv", header, rows)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

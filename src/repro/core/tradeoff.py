@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import numpy as np
 
+from repro.core import closed_form as CF
 from repro.core.convergence import ConvergenceBound
 from repro.core.wireless import (
     WirelessConfig,
@@ -134,7 +135,7 @@ class TradeoffSolution:
 
 def prune_rates_for_deadline(t_np: np.ndarray, deadline: float) -> np.ndarray:
     """Eq. (16): rho_i^min(t~) = max{1 - t~/t_i^np, 0}."""
-    return np.maximum(1.0 - deadline / np.asarray(t_np), 0.0)
+    return CF.prune_rates_for_deadline(t_np, deadline, xp=np)
 
 
 def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray
@@ -143,33 +144,13 @@ def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray
 
     The objective g(t~) = (1-lambda) t~ + lambda m sum K_i^2 rho_i^min(t~)
     is convex piecewise-linear; its minimum sits at t~min or at the first
-    breakpoint t_i^np (ascending) where the slope turns >= 0.
+    breakpoint t_i^np (ascending) where the slope turns >= 0.  The vertex
+    enumeration is the shared ``closed_form.pruning_vertex`` (also the jax
+    fleet solver's pruning step).
     """
-    lam, m = prob.weight, prob.bound.m
-    k = np.asarray(prob.num_samples, dtype=np.float64)
     t_np = prob.no_prune_latency(bandwidth)
-
-    t_min = float(np.max(t_np * (1.0 - prob.max_prune)))
-    t_max = float(np.max(t_np))
-    if not np.isfinite(t_max):
-        # some UE has zero uplink rate: no finite deadline exists
-        return np.inf, np.ones(prob.num_clients)
-
-    def slope_at(t: float) -> float:
-        # slope of g on the segment just above t: active UEs have t_i^np > t
-        active = t_np > t
-        return (1.0 - lam) - lam * m * float(np.sum(k[active] ** 2 / t_np[active]))
-
-    # Candidate vertices: t~min plus every breakpoint within (t~min, t~max].
-    candidates = [t_min] + sorted(float(t) for t in t_np
-                                  if t_min < t <= t_max) + [t_max]
-    # Closed-form walk (Prop. 1): first vertex whose rightward slope >= 0.
-    t_star = candidates[-1]
-    for t in candidates:
-        if slope_at(t) >= 0.0:
-            t_star = t
-            break
-    rho = np.minimum(prune_rates_for_deadline(t_np, t_star), prob.max_prune)
+    t_star, rho = CF.pruning_vertex(t_np, prob.num_samples, prob.weight,
+                                    prob.bound.m, prob.max_prune, xp=np)
     return float(t_star), rho
 
 
@@ -183,35 +164,8 @@ def min_bandwidth_for_rates(target_rate: np.ndarray, tx_power: np.ndarray,
     """Vectorised bisection on R^u(B) = target (Eq. 21), any broadcastable
     shapes.  R^u(B) is increasing in B (Lemma 1); targets at/above the
     capacity ceiling p h / (N0 ln 2) return inf."""
-    target, p, h = np.broadcast_arrays(
-        np.asarray(target_rate, dtype=np.float64),
-        np.asarray(tx_power, dtype=np.float64),
-        np.asarray(h_up, dtype=np.float64))
-    ceiling = p * h / (noise_psd * _LN2)
-    feasible = target < ceiling
-    pos = target > 0.0
-
-    # Initial upper bracket: grow hi geometrically from a capacity-based guess.
-    safe_target = np.where(pos, target, 1.0)
-    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
-        snr_at_target = np.clip(p * h / (safe_target * noise_psd), 0.0, 1e300)
-        guess = safe_target / np.maximum(np.log2(1.0 + snr_at_target), 1e-12)
-    hi = np.where(pos, np.maximum(guess, 1.0), 1.0)
-    for _ in range(200):
-        r = uplink_rate(hi, p, h, noise_psd)
-        need = feasible & pos & (r < target)
-        if not np.any(need):
-            break
-        hi = np.where(need, hi * 2.0, hi)
-    lo = np.zeros_like(hi)
-    for _ in range(iters):
-        mid = 0.5 * (lo + hi)
-        r = uplink_rate(mid, p, h, noise_psd)
-        below = r < target
-        lo = np.where(below, mid, lo)
-        hi = np.where(below, hi, mid)
-    out = np.where(pos, hi, 0.0)
-    return np.where(feasible | ~pos, out, np.inf)
+    return CF.min_bandwidth_for_rates(target_rate, tx_power, h_up, noise_psd,
+                                      iters=iters, xp=np)
 
 
 def solve_bandwidth(prob: TradeoffProblem, prune: np.ndarray, deadline,
@@ -221,21 +175,10 @@ def solve_bandwidth(prob: TradeoffProblem, prune: np.ndarray, deadline,
     ``prune`` may carry extra leading batch dims (grid search); ``deadline``
     broadcasts against it.
     """
-    prune = np.asarray(prune, dtype=np.float64)
-    deadline = np.asarray(deadline, dtype=np.float64)
-    if deadline.ndim < prune.ndim:  # scalar/batched deadline vs (..., I) prune
-        deadline = deadline[..., None]
-    prune, deadline = np.broadcast_arrays(prune, deadline)
-    t_c = training_latency(prob.cfg, prune, prob.num_samples, prob.cpu_hz)
-    slack = deadline - t_c
-    payload = (1.0 - prune) * prob.cfg.model_bits
-    with np.errstate(divide="ignore", invalid="ignore"):
-        target = payload / slack
-    bw = min_bandwidth_for_rates(np.where((payload > 0) & (slack > 0), target, 0.0),
-                                 prob.tx_power, prob.h_up,
-                                 prob.cfg.noise_psd_w_per_hz, iters=iters)
-    bw = np.where(payload <= 0.0, 0.0, bw)
-    return np.where((payload > 0.0) & (slack <= 0.0), np.inf, bw)
+    return CF.bandwidth_for_deadline(
+        prune, deadline, prob.num_samples, prob.cpu_hz,
+        prob.cfg.cycles_per_sample, prob.cfg.model_bits, prob.tx_power,
+        prob.h_up, prob.cfg.noise_psd_w_per_hz, iters=iters, xp=np)
 
 
 # ---------------------------------------------------------------------------

@@ -12,13 +12,17 @@ Implements Eqs. (1)-(4) and the packet-error-rate model verbatim:
 
 All quantities are SI (Hz, W, s, bits).  The module is pure numpy/python —
 it is the host-side substrate that the trade-off optimizer consumes; no
-device state is touched.
+device state is touched.  The formulas themselves live in
+``core.closed_form`` (array-namespace generic) so the jax fleet path
+(`repro.fleet`) shares one implementation with this reference path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import numpy as np
+
+from repro.core import closed_form as CF
 
 __all__ = [
     "WirelessConfig",
@@ -111,9 +115,8 @@ class Channel:
 
 def downlink_rate(cfg: WirelessConfig, h_down: np.ndarray) -> np.ndarray:
     """Eq. (1): broadcast uses the full bandwidth B."""
-    b = cfg.bandwidth_hz
-    snr = cfg.tx_power_bs_w * np.asarray(h_down) / (b * cfg.noise_psd_w_per_hz)
-    return b * np.log2(1.0 + snr)
+    return CF.downlink_rate(cfg.bandwidth_hz, cfg.tx_power_bs_w, h_down,
+                            cfg.noise_psd_w_per_hz, xp=np)
 
 
 def uplink_rate(bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
@@ -122,18 +125,13 @@ def uplink_rate(bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
 
     Returns 0 for B_i == 0 (the limit of B log2(1+c/B) as B->0 is 0).
     """
-    b = np.asarray(bandwidth, dtype=np.float64)
-    with np.errstate(divide="ignore", invalid="ignore"):
-        snr = np.asarray(tx_power) * np.asarray(h_up) / (b * noise_psd)
-        r = b * np.log2(1.0 + snr)
-    return np.where(b > 0.0, r, 0.0)
+    return CF.uplink_rate(bandwidth, tx_power, h_up, noise_psd, xp=np)
 
 
 def packet_error_rate(bandwidth: np.ndarray, tx_power: np.ndarray,
                       h_up: np.ndarray, noise_psd: float, m0: float) -> np.ndarray:
     """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)).  Increasing in B_i (Lemma 1)."""
-    b = np.asarray(bandwidth, dtype=np.float64)
-    return 1.0 - np.exp(-m0 * b * noise_psd / (np.asarray(tx_power) * np.asarray(h_up)))
+    return CF.packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0, xp=np)
 
 
 def effective_per(per: np.ndarray, retx: int) -> np.ndarray:
@@ -161,17 +159,14 @@ def broadcast_latency(cfg: WirelessConfig, h_down: np.ndarray) -> float:
 def training_latency(cfg: WirelessConfig, prune_rate: np.ndarray,
                      num_samples: np.ndarray, cpu_hz: np.ndarray) -> np.ndarray:
     """Eq. (2): t_i^c = (1 - rho_i) K_i d^c / f_i."""
-    return (1.0 - np.asarray(prune_rate)) * np.asarray(num_samples) \
-        * cfg.cycles_per_sample / np.asarray(cpu_hz)
+    return CF.training_latency(prune_rate, num_samples, cfg.cycles_per_sample,
+                               cpu_hz, xp=np)
 
 
 def upload_latency(cfg: WirelessConfig, prune_rate: np.ndarray,
                    rate_up: np.ndarray) -> np.ndarray:
     """t_i^u = (1 - rho_i) D_M / R_i^u.  inf when the rate is 0."""
-    r = np.asarray(rate_up, dtype=np.float64)
-    with np.errstate(divide="ignore"):
-        t = (1.0 - np.asarray(prune_rate)) * cfg.model_bits / r
-    return np.where(r > 0.0, t, np.inf)
+    return CF.upload_latency(prune_rate, cfg.model_bits, rate_up, xp=np)
 
 
 def round_latency(cfg: WirelessConfig, h_down: np.ndarray, prune_rate: np.ndarray,

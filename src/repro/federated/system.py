@@ -113,6 +113,53 @@ def _round_update(params, rho, per, key, x, y, w, k, lr, structured=False):
     return new_params, jnp.mean(losses), arrivals
 
 
+def to_fleet_config(cfg: FLConfig, num_cells: int = 1, **overrides):
+    """Map an FLConfig onto the fleet engine's configuration.
+
+    The fleet path is a *simulation engine*, not a bit-level replay of
+    ``run``: it draws its own synthetic task and heterogeneity, but shares
+    the wireless model, the closed-form solver (same ``core.closed_form``
+    implementation) and the smoothness constants.
+    """
+    from repro.fleet import FleetConfig, FleetTopology
+
+    if cfg.num_clients % num_cells:
+        raise ValueError(f"num_clients={cfg.num_clients} not divisible by "
+                         f"num_cells={num_cells}")
+    k_lo, k_hi = int(min(cfg.samples)), int(max(cfg.samples))
+    topo = FleetTopology(num_cells=num_cells,
+                         clients_per_cell=cfg.num_clients // num_cells,
+                         cpu_hz_range=(cfg.cpu_hz, cfg.cpu_hz),
+                         samples_range=(k_lo, k_hi),
+                         max_prune=cfg.max_prune)
+    fields = dict(topology=topo, wireless=cfg.wireless,
+                  smoothness=cfg.smoothness, weight=cfg.weight,
+                  rounds=cfg.rounds, lr=cfg.lr, seed=cfg.seed)
+    fields.update(overrides)
+    return FleetConfig(**fields)
+
+
+def run_any(cfg: FLConfig, progress: bool = False, fleet_threshold: int = 64,
+            num_cells: int = 1, mesh=None):
+    """Dispatch: small populations take the exact per-round host-solver
+    reference path (``run``, unchanged trajectories); populations past
+    ``fleet_threshold`` delegate to the scan-compiled fleet engine.
+
+    Only the "proposed" scheme exists on-device — the §V baselines (GBA /
+    FPR / exhaustive) stay host-side reference implementations.
+
+    NOTE the return type switches with the path: the host path returns
+    ``FLResult`` (accuracy as [(round, acc)] pairs, list-typed traces);
+    the fleet path returns ``repro.fleet.FleetResult`` (dense per-round
+    ndarrays).  Callers that cross the threshold must handle both.
+    """
+    if cfg.num_clients <= fleet_threshold or cfg.scheme != "proposed":
+        return run(cfg, progress=progress)
+    from repro.fleet import engine as FE
+    return FE.run_fleet(to_fleet_config(cfg, num_cells=num_cells), mesh=mesh,
+                        progress=progress)
+
+
 def run(cfg: FLConfig, progress: bool = False) -> FLResult:
     rng = jax.random.PRNGKey(cfg.seed)
     data = synthetic.make_dataset(seed=cfg.seed)

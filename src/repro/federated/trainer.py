@@ -20,6 +20,7 @@ semantics exactly.
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any, Optional
 
 import jax
@@ -35,6 +36,23 @@ from repro.core import aggregation, pruning
 from repro.models import model as M
 
 PyTree = Any
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(shard_map).parameters)
+
+
+def _hybrid_shard_map(f, mesh: Mesh, in_specs, out_specs,
+                      manual_axes: tuple[str, ...]):
+    """shard_map with ``manual_axes`` Manual and every other mesh axis Auto,
+    across the two API generations: new jax spells this (axis_names=...,
+    check_vma=False), old jax spells it (auto=<complement>, check_rep=False).
+    """
+    if "axis_names" in _SHARD_MAP_PARAMS:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, axis_names=set(manual_axes),
+                         check_vma=False)
+    auto = frozenset(mesh.axis_names) - set(manual_axes)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     auto=auto, check_rep=False)
 
 
 def num_clients(mesh: Mesh, client_axes: tuple[str, ...]) -> int:
@@ -89,16 +107,14 @@ def make_fl_train_step(cfg, mesh: Mesh,
     # Eq. (5) aggregation), every other mesh axis (the tensor axis) stays
     # Auto so the per-client model computation is partitioned across it by
     # GSPMD + the model's logical sharding constraints.
-    mapped = shard_map(
-        step, mesh=mesh,
+    mapped = _hybrid_shard_map(
+        step, mesh,
         in_specs=(P(), {"tokens": P(caxes)}, P(caxes), P(caxes), P(caxes)),
         out_specs=(P(), {"loss": P(), "achieved_rho": P(caxes)}),
-        axis_names=set(client_axes),
-        check_vma=False)
+        manual_axes=client_axes)
 
     if tp_shard_params and "model" in mesh.axis_names \
             and mesh.shape["model"] > 1:
-        import functools
         from repro.launch import shardings as SH
         params_shape = jax.eval_shape(
             functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
@@ -113,14 +129,19 @@ def make_fl_train_step(cfg, mesh: Mesh,
 
 def fl_input_specs(cfg, mesh: Mesh, client_axes: tuple[str, ...],
                    per_client_batch: int, seq_len: int):
-    """ShapeDtypeStructs + shardings for the FL dry-run."""
+    """ShapeDtypeStructs + NamedShardings for the FL dry-run.
+
+    Returns ``(batch, vec, shardings)`` where ``shardings`` mirrors the
+    step's (batch, rho, arrivals, k) inputs: tokens and the per-client
+    vectors shard over the client axes, matching ``make_fl_train_step``'s
+    in_specs.
+    """
     n = num_clients(mesh, client_axes)
     caxes = client_axes if len(client_axes) > 1 else client_axes[0]
     batch = {"tokens": jax.ShapeDtypeStruct((n * per_client_batch, seq_len),
                                             jnp.int32)}
     vec = jax.ShapeDtypeStruct((n,), jnp.float32)
-    shardings = (
-        jax.tree.map(lambda _: NamedSharding(mesh, P()), {"dummy": 0}),
-    )
-    del shardings
-    return batch, vec
+    client_sharding = NamedSharding(mesh, P(caxes))
+    shardings = ({"tokens": client_sharding}, client_sharding,
+                 client_sharding, client_sharding)
+    return batch, vec, shardings

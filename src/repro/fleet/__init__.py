@@ -1,0 +1,12 @@
+"""Fleet-scale FL simulation engine.
+
+Scales the paper's 5-UE Table-I system to 10k-1M clients: batched
+multi-cell channel generation (`topology`), the closed-form trade-off
+solver vmapped over cells on-device (`solver`), partial participation /
+stragglers / round deadlines (`scheduler`), and the full round compiled as
+a single `jax.lax.scan` with no host round-trips (`engine`).
+"""
+
+from repro.fleet.engine import FleetConfig, FleetResult, run_fleet  # noqa: F401
+from repro.fleet.scheduler import ScheduleConfig  # noqa: F401
+from repro.fleet.topology import FleetTopology  # noqa: F401

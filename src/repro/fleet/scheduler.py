@@ -1,0 +1,84 @@
+"""Round scheduling: partial participation, stragglers, deadlines.
+
+Beyond-paper scenarios that only make sense at fleet scale (cf. the
+time-triggered FL of arXiv:2408.01765):
+
+* partial participation — per cell, a fixed number of clients is drawn
+  each round, uniformly or proportional-to-K_i (Gumbel top-k, i.e. weighted
+  sampling without replacement, shape-static and jit-safe);
+* stragglers — i.i.d. per-round client dropout after the solver commits
+  the allocation (models churn the optimizer cannot see);
+* round deadline — a hard wall-clock cutoff: clients whose realized
+  latency exceeds it are dropped from aggregation and the round is clamped
+  to the deadline.
+
+All decisions are masks shaped (num_cells, clients_per_cell); nothing here
+touches the host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    participation: str = "full"         # full | uniform | weighted
+    participants_per_cell: int = 0      # m per cell (<=0 or >=I: everyone)
+    straggler_prob: float = 0.0         # i.i.d. post-solve dropout
+    round_deadline_s: float = math.inf  # hard per-round wall-clock cutoff
+
+    @property
+    def has_deadline(self) -> bool:
+        return math.isfinite(self.round_deadline_s)
+
+
+def participation_mask(key: jax.Array, sched: ScheduleConfig,
+                       num_samples: jnp.ndarray) -> jnp.ndarray:
+    """(C, I) float mask of this round's scheduled clients.
+
+    "uniform" draws m uniformly per cell; "weighted" draws m with
+    probability proportional to K_i (Gumbel top-k over log K_i).
+    """
+    shape = num_samples.shape
+    m = sched.participants_per_cell
+    if sched.participation == "full" or m <= 0 or m >= shape[-1]:
+        return jnp.ones(shape, jnp.float32)
+    if sched.participation == "uniform":
+        logits = jnp.zeros(shape)
+    elif sched.participation == "weighted":
+        logits = jnp.log(num_samples.astype(jnp.float32))
+    else:
+        raise ValueError(f"unknown participation {sched.participation!r}")
+    z = logits + jax.random.gumbel(key, shape)
+    rank = jnp.argsort(jnp.argsort(-z, axis=-1), axis=-1)
+    return (rank < m).astype(jnp.float32)
+
+
+def straggler_mask(key: jax.Array, sched: ScheduleConfig,
+                   shape: tuple[int, ...]) -> jnp.ndarray:
+    """(C, I) float mask of clients that did NOT straggle out this round."""
+    if sched.straggler_prob <= 0.0:
+        return jnp.ones(shape, jnp.float32)
+    return jax.random.bernoulli(
+        key, 1.0 - sched.straggler_prob, shape).astype(jnp.float32)
+
+
+def on_time_mask(latency_s: jnp.ndarray, sched: ScheduleConfig) -> jnp.ndarray:
+    """Clients whose realized latency beats the round deadline (all-ones
+    when no deadline is configured; non-finite latencies always miss)."""
+    if not sched.has_deadline:
+        return jnp.isfinite(latency_s).astype(jnp.float32)
+    return (latency_s <= sched.round_deadline_s).astype(jnp.float32)
+
+
+def clamp_round_latency(makespan_s: jnp.ndarray,
+                        sched: ScheduleConfig) -> jnp.ndarray:
+    """Time-triggered rounds end at the deadline regardless of stragglers."""
+    if not sched.has_deadline:
+        return makespan_s
+    return jnp.minimum(makespan_s, sched.round_deadline_s)

@@ -1,0 +1,166 @@
+"""Batched trade-off solver: Algorithm 1 on-device, vmapped over cells.
+
+The jax port of ``core.tradeoff.solve_alternating``.  Both paths call the
+same ``core.closed_form`` implementations of Proposition 1 (pruning
+vertex) and Eq. (21) (minimum-bandwidth bisection); this module only adds
+the alternating driver, expressed as a fixed-trip ``lax.fori_loop`` whose
+per-cell updates freeze once the inner cost converges — reproducing the
+host solver's early-exit semantics element-wise, which keeps the whole
+thing jit/vmap/scan-compatible (no host round-trips, no data-dependent
+shapes).
+
+``solve_fleet`` vmaps the single-cell solver over the leading cell axis so
+per-round control for the entire fleet is one XLA program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import closed_form as CF
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    """Static knobs of the alternating solver (hashable: safe to close over)."""
+
+    max_iters: int = 16       # Algorithm-1 alternations
+    bw_iters: int = 60        # Eq.-(21) bisection depth
+    grow_iters: int = 48      # bracket doublings (2^48 x the capacity guess)
+    rtol: float = 1e-8        # convergence freeze threshold on inner cost
+
+
+class CellSolution(NamedTuple):
+    """Per-cell solver output; every field broadcast over leading cell dims."""
+
+    prune: jnp.ndarray        # rho_i*       (..., I)
+    bandwidth: jnp.ndarray    # B_i*         (..., I)
+    deadline: jnp.ndarray     # t~*          (...,)
+    per: jnp.ndarray          # q_i(B_i*)    (..., I)
+    inner_cost: jnp.ndarray   # (14a)        (...,)
+    iterations: jnp.ndarray   # alternations until freeze   (...,)
+    feasible: jnp.ndarray     # finite B, sum B_i <= B      (...,)
+
+
+def solve_cell(h_up: jnp.ndarray, num_samples: jnp.ndarray,
+               cpu_hz: jnp.ndarray, tx_power: jnp.ndarray,
+               max_prune: jnp.ndarray, m: jnp.ndarray,
+               mask: Optional[jnp.ndarray] = None,
+               deadline_cap: Optional[jnp.ndarray] = None, *,
+               bandwidth_hz: float, noise_psd: float, waterfall_m0: float,
+               model_bits: float, cycles_per_sample: float, weight: float,
+               solver: SolverConfig = SolverConfig()) -> CellSolution:
+    """Algorithm 1 for one cell of I clients; all inputs shaped (I,).
+
+    ``m`` is the cell's Eq.-(11) surrogate coefficient (see
+    ``closed_form.surrogate_m``); ``mask`` restricts the round to the
+    scheduled subset — non-participants get rho = 0, B = 0 and contribute
+    nothing to the vertex walk or the cost.
+
+    ``deadline_cap`` (scalar) upper-bounds the solved deadline t~ — the
+    time-triggered-FL scenario (cf. arXiv:2408.01765): the Eq.-(16)
+    minimum pruning rates are re-derived at the capped deadline, and
+    clients that cannot meet it even at rho_i^max get B = 0 (unschedulable
+    this round) instead of an infinite allocation.
+    """
+    lam = weight
+    k = num_samples.astype(h_up.dtype)
+    if mask is None:
+        mask = jnp.ones_like(h_up)
+    participating = mask > 0.0
+    n_part = jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+
+    def no_prune_latency(bw):
+        r = CF.uplink_rate(bw, tx_power, h_up, noise_psd, xp=jnp)
+        t_u = CF.upload_latency(jnp.zeros_like(bw), model_bits, r, xp=jnp)
+        t_c0 = CF.training_latency(jnp.zeros_like(bw), k, cycles_per_sample,
+                                   cpu_hz, xp=jnp)
+        return t_u + t_c0
+
+    def inner_cost(deadline, bw, rho):
+        q = CF.packet_error_rate(bw, tx_power, h_up, noise_psd, waterfall_m0,
+                                 xp=jnp)
+        learning = m * jnp.sum(mask * k * (q + k * rho), axis=-1)
+        return (1.0 - lam) * deadline + lam * learning
+
+    def body(state):
+        bw, dl, rho, prev_cost, done, iters = state
+        t_np = no_prune_latency(bw)
+        dl2, rho2 = CF.pruning_vertex(t_np, k, lam, m, max_prune, xp=jnp,
+                                      mask=mask)
+        if deadline_cap is not None:
+            dl2 = jnp.minimum(dl2, deadline_cap)
+            rho2 = jnp.minimum(CF.prune_rates_for_deadline(t_np, dl2, xp=jnp),
+                               max_prune) * mask
+        bw2 = CF.bandwidth_for_deadline(
+            rho2, dl2, k, cpu_hz, cycles_per_sample, model_bits, tx_power,
+            h_up, noise_psd, iters=solver.bw_iters, xp=jnp,
+            grow_iters=solver.grow_iters)
+        if deadline_cap is not None:  # unschedulable at rho^max: sit out
+            bw2 = jnp.where(jnp.isfinite(bw2), bw2, 0.0)
+            bw2 = jnp.where(participating, bw2, 0.0)
+            # A binding cap voids Lemma 2's feasibility guarantee: the
+            # deadline-meeting minimum can oversubscribe B.  Keep the
+            # max-cardinality schedulable subset (ascending-demand prefix)
+            # and sideline the rest for this round.
+            order = jnp.argsort(bw2)
+            fits = jnp.cumsum(jnp.take(bw2, order)) \
+                <= bandwidth_hz * (1.0 + 1e-9)
+            keep = jnp.zeros_like(bw2).at[order].set(
+                fits.astype(bw2.dtype))
+            bw2 = bw2 * keep
+        bw2 = jnp.where(participating, bw2, 0.0)
+        cost = inner_cost(dl2, bw2, rho2)
+        conv = jnp.abs(prev_cost - cost) <= solver.rtol * jnp.maximum(
+            jnp.abs(cost), 1.0)
+        bw = jnp.where(done, bw, bw2)
+        dl = jnp.where(done, dl, dl2)
+        rho = jnp.where(done, rho, rho2)
+        prev_cost = jnp.where(done, prev_cost, cost)
+        iters = iters + jnp.where(done, 0, 1)
+        return bw, dl, rho, prev_cost, done | conv, iters
+
+    bw0 = mask * (bandwidth_hz / n_part)
+    state = (bw0, jnp.asarray(jnp.inf, bw0.dtype),
+             jnp.zeros_like(bw0), jnp.asarray(jnp.inf, bw0.dtype),
+             jnp.asarray(False), jnp.asarray(0, jnp.int32))
+    bw, dl, rho, cost, _, iters = jax.lax.fori_loop(
+        0, solver.max_iters, lambda _, s: body(s), state)
+
+    per = CF.packet_error_rate(bw, tx_power, h_up, noise_psd, waterfall_m0,
+                               xp=jnp) * mask
+    feasible = jnp.all(jnp.isfinite(bw), axis=-1) \
+        & (jnp.sum(bw, axis=-1) <= bandwidth_hz * (1.0 + 1e-6))
+    return CellSolution(prune=rho, bandwidth=bw, deadline=dl, per=per,
+                        inner_cost=cost, iterations=iters, feasible=feasible)
+
+
+def solve_fleet(h_up: jnp.ndarray, num_samples: jnp.ndarray,
+                cpu_hz: jnp.ndarray, tx_power: jnp.ndarray,
+                max_prune: jnp.ndarray, m: jnp.ndarray,
+                mask: Optional[jnp.ndarray] = None,
+                deadline_cap: Optional[jnp.ndarray] = None, *,
+                bandwidth_hz: float, noise_psd: float, waterfall_m0: float,
+                model_bits: float, cycles_per_sample: float, weight: float,
+                solver: SolverConfig = SolverConfig()) -> CellSolution:
+    """vmap of ``solve_cell`` over the leading cell axis.
+
+    Array args are (C, I) except ``m`` and ``deadline_cap`` which are (C,);
+    the whole fleet's per-round control resolves as one XLA program.
+    """
+    fn = partial(solve_cell, bandwidth_hz=bandwidth_hz, noise_psd=noise_psd,
+                 waterfall_m0=waterfall_m0, model_bits=model_bits,
+                 cycles_per_sample=cycles_per_sample, weight=weight,
+                 solver=solver)
+    if mask is None:
+        mask = jnp.ones_like(h_up)
+    if deadline_cap is None:
+        return jax.vmap(fn)(h_up, num_samples, cpu_hz, tx_power, max_prune,
+                            m, mask)
+    return jax.vmap(fn)(h_up, num_samples, cpu_hz, tx_power, max_prune, m,
+                        mask, deadline_cap)

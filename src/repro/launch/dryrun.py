@@ -68,7 +68,7 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
 
     wall = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = HC.xla_cost_analysis(compiled)
     # loop-aware counters: XLA's cost_analysis counts while bodies ONCE;
     # hlo_cost re-derives flops/bytes/collective bytes with trip counts
     hc = HC.hlo_cost(compiled.as_text(),
@@ -111,9 +111,6 @@ def _mem_total(mem) -> int:
 def _fl_spec(cfg, shape, mesh) -> dict:
     """Dry-run spec for the distributed pruned-FL step (paper technique
     on the production mesh): clients on ("pod","data"), model on "model"."""
-    import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
     from repro.federated import trainer as FT
     from repro.models import model as M
     import functools
@@ -125,14 +122,14 @@ def _fl_spec(cfg, shape, mesh) -> dict:
 
     params_shape = jax.eval_shape(
         functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
-    batch = {"tokens": jax.ShapeDtypeStruct((n * per_client, shape.seq_len),
-                                            jnp.int32)}
-    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
-    caxes = client_axes if len(client_axes) > 1 else client_axes[0]
+    batch, vec, _shardings = FT.fl_input_specs(cfg, mesh, client_axes,
+                                               per_client, shape.seq_len)
     return {
         "step": step,
         "args": (params_shape, batch, vec, vec, vec),
-        # shard_map's jit wrapper takes shardings from in_specs
+        # shard_map's jit wrapper takes shardings from in_specs; the
+        # explicit NamedShardings from fl_input_specs are for callers
+        # that device_put real arrays before invoking the step
         "in_shardings": None,
         "out_shardings": None,
     }

@@ -12,19 +12,31 @@ SINGLE_POD = (16, 16)                     # 256 chips (TPU v5e pod)
 MULTI_POD = (2, 16, 16)                   # 2 pods = 512 chips
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the API supports them.
+
+    jax < 0.5 has neither ``jax.sharding.AxisType`` nor the ``axis_types``
+    kwarg; Auto is its only (implicit) behaviour, so plain ``make_mesh`` is
+    equivalent there.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = jax.device_count()
     data = data or (n // model)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def required_devices(multi_pod: bool) -> int:

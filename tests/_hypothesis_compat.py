@@ -1,0 +1,92 @@
+"""Deterministic stand-in for the tiny slice of the hypothesis API this
+suite uses (``given``/``settings``/``strategies``), for environments where
+hypothesis is not installed.
+
+It is *not* a property-based testing engine: each ``@given`` test is run on
+``max_examples`` pseudo-random draws from a seed derived from the test name
+(CRC32, stable across processes), with the first two draws pinned to the
+strategy bounds so boundary branches stay covered.  No shrinking, no
+database — a failing example is reported via the assertion it trips plus
+the draw appended to the exception message.
+"""
+
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw, lo=None, hi=None):
+        self._draw = draw
+        self.lo = lo
+        self.hi = hi
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mirrors the hypothesis module name
+    @staticmethod
+    def floats(lo: float, hi: float) -> _Strategy:
+        # log-uniform across wide positive ranges (hypothesis also biases
+        # toward varied magnitudes), plain uniform otherwise
+        if lo > 0.0 and hi / lo > 1e3:
+            def draw(rng):
+                return float(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        else:
+            def draw(rng):
+                return float(rng.uniform(lo, hi))
+        return _Strategy(draw, lo, hi)
+
+    @staticmethod
+    def integers(lo: int, hi: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)), lo, hi)
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(len(opts)))],
+                         opts[0], opts[-1])
+
+
+def settings(**kwargs):
+    max_examples = kwargs.get("max_examples", 25)
+
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(fn, "_compat_max_examples", 25)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(max(n, 1)):
+                if i == 0:
+                    example = tuple(s.lo for s in strats)
+                elif i == 1:
+                    example = tuple(s.hi for s in strats)
+                else:
+                    example = tuple(s.example(rng) for s in strats)
+                try:
+                    fn(*example)
+                except Exception as e:  # annotate the failing draw
+                    e.args = (f"{e.args[0] if e.args else ''}"
+                              f"  [falsifying example {example!r}]",) \
+                        + e.args[1:]
+                    raise
+
+        # pytest resolves fixture arguments through __wrapped__; the
+        # examples are injected here, so the wrapper must present a
+        # zero-argument signature.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -69,3 +69,29 @@ def test_fl_step_zero_rho_matches_unpruned_grad(setup):
     for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(expect)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-5, atol=1e-6)
+
+
+def test_fl_input_specs_shardings(setup):
+    """fl_input_specs returns real client-axis NamedShardings that place
+    arrays the step accepts (the dry-run consumes the specs; this is the
+    consumer of the shardings)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg, mesh, step, params = setup
+    n = FT.num_clients(mesh, ("data",))
+    batch, vec, shardings = FT.fl_input_specs(cfg, mesh, ("data",), 2, 16)
+    assert batch["tokens"].shape == (n * 2, 16)
+    assert vec.shape == (n,)
+    batch_s, rho_s, arr_s, k_s = shardings
+    for s in (batch_s["tokens"], rho_s, arr_s, k_s):
+        assert isinstance(s, NamedSharding)
+        assert s.spec == P("data")
+    # placing real inputs with these shardings must run through the step
+    tokens = jax.device_put(
+        jax.random.randint(jax.random.PRNGKey(3), batch["tokens"].shape, 0,
+                           cfg.vocab_size), batch_s["tokens"])
+    rho = jax.device_put(jnp.zeros(vec.shape), rho_s)
+    ones = jax.device_put(jnp.ones(vec.shape), arr_s)
+    k = jax.device_put(jnp.full(vec.shape, 40.0), k_s)
+    _, metrics = step(params, {"tokens": tokens}, rho, ones, k)
+    assert bool(jnp.isfinite(metrics["loss"]))

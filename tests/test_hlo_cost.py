@@ -15,7 +15,8 @@ def _compiled_text(f, *specs):
 
 
 def _xla_flops(f, *specs):
-    return jax.jit(f).lower(*specs).compile().cost_analysis().get("flops", 0.0)
+    compiled = jax.jit(f).lower(*specs).compile()
+    return HC.xla_cost_analysis(compiled).get("flops", 0.0)
 
 
 def test_single_matmul_matches_xla():
@@ -107,8 +108,8 @@ def test_collectives_parsed_with_bytes():
     # current device count and a 1d mesh — psum still emits all-reduce
     from jax.sharding import PartitionSpec as P
     n = jax.device_count()
-    mesh = jax.make_mesh((n,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch import mesh as MESH
+    mesh = MESH.make_mesh((n,), ("d",))
     try:
         shard_map = jax.shard_map
     except AttributeError:

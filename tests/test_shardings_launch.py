@@ -95,8 +95,8 @@ def test_constrain_all_dropped_is_noop():
     applied (an empty P() would force replication).  A >1-sized fake mesh
     exercises the guard; the final None-only check uses the real API."""
     from repro.models import sharding as MS
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch import mesh as MESH
+    mesh = MESH.make_mesh((1, 1), ("data", "model"))
     with MS.use_rules(dict(MS.DEFAULT_RULES), mesh):
         x = jnp.ones((4, 4))
         # all logical names map to None-able axes -> pure no-op path

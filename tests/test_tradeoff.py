@@ -6,7 +6,10 @@ the invariants under test are the paper's own lemmas/propositions.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline image: deterministic fallback driver
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import tradeoff as T
 from repro.core import wireless as W

@@ -113,6 +113,64 @@ def test_channel_gains_positive():
     assert np.all(h_up < 1e-6)
 
 
+def test_effective_per_edge_cases():
+    """q -> 0 and q -> 1 limits of the retransmission model."""
+    for retx in (0, 1, 3):
+        # q = 0: never lost, regardless of the retransmission budget
+        assert W.effective_per(np.array([0.0]), retx)[0] == 0.0
+        # q = 1: always lost — retransmissions cannot help
+        assert W.effective_per(np.array([1.0]), retx)[0] == 1.0
+    # q -> 1 from below stays strictly < 1 and monotone in retx
+    q = np.array([1.0 - 1e-12])
+    assert 0.0 < W.effective_per(q, 3)[0] < 1.0
+    assert W.effective_per(q, 3)[0] <= W.effective_per(q, 0)[0]
+
+
+def test_expected_tries_edge_cases():
+    """E[tries] limits: 1 at q=0; the full budget retx+1 at q=1 (the
+    geometric-sum formula is 0/0 there — the guard must kick in)."""
+    for retx in (0, 1, 5):
+        assert W.expected_tries(np.array([0.0]), retx)[0] == pytest.approx(1.0)
+        assert W.expected_tries(np.array([1.0]), retx)[0] == pytest.approx(
+            retx + 1.0)
+    # continuity just below 1: sum_{j<=retx} q^j -> retx+1
+    t = W.expected_tries(np.array([1.0 - 1e-9]), 4)[0]
+    assert t == pytest.approx(5.0, rel=1e-6)
+    # never exceeds the budget, never below 1
+    q = np.linspace(0.0, 1.0, 101)
+    t = W.expected_tries(q, 2)
+    assert np.all((t >= 1.0) & (t <= 3.0 + 1e-12))
+    assert np.all(np.diff(t) >= 0.0)
+
+
+def test_uplink_rate_b_zero_vector():
+    """B_i = 0 inside a mixed allocation: exactly 0, finite elsewhere, no
+    nan leakage from the 0/0 SNR."""
+    n0 = W.dbm_to_watt(-174.0)
+    b = np.array([0.0, 1e6, 0.0, 2e6])
+    r = W.uplink_rate(b, 0.2, 1e-10, n0)
+    assert r[0] == 0.0 and r[2] == 0.0
+    assert np.all(np.isfinite(r)) and r[1] > 0.0 and r[3] > r[1]
+
+
+def test_per_monotone_in_bandwidth_lemma1():
+    """Lemma 1 on random (p, h) draws: q_i strictly increasing in B_i and
+    q(0) = 0."""
+    rng = np.random.default_rng(0)
+    n0, m0 = W.dbm_to_watt(-174.0), W.db_to_linear(0.023)
+    for _ in range(16):
+        p = rng.uniform(0.05, 0.4)
+        h = 10.0 ** rng.uniform(-12.0, -8.0)
+        b = np.concatenate([[0.0], np.geomspace(1e2, 1e9, 64)])
+        q = W.packet_error_rate(b, p, h, n0, m0)
+        assert q[0] == 0.0
+        assert np.all(q <= 1.0)
+        # strictly increasing until float64 saturates the exponential at 1
+        unsaturated = q[1:] < 1.0
+        assert np.all(np.diff(q)[unsaturated] > 0.0)
+        assert np.all(np.diff(q) >= 0.0)
+
+
 def test_retransmission_model():
     """Beyond-paper ablation support: q_eff = q^(R+1), E[tries] monotone."""
     q = np.array([0.0, 0.01, 0.5])
