@@ -1,4 +1,4 @@
-"""Fleet engine throughput: rounds/sec vs client count.
+"""Fleet engine throughput: rounds/sec vs client count, sync vs async.
 
 Measures the scan-compiled round loop end-to-end (channel sample ->
 closed-form solver -> masked-gradient FedSGD -> packet-error aggregation
@@ -7,11 +7,19 @@ from the paper's 5 UEs up to 100k clients.  The solver runs *inside* the
 scan — zero per-round host work — so rounds/sec is the compiled-program
 number the ROADMAP north star cares about.
 
+``--compare`` benchmarks the synchronous barrier against FedBuff-style
+buffered aggregation on a straggler-heavy fleet: same client count, same
+seed, reporting both engine throughput (rounds/s or events/s of host time)
+and *simulated* wall-clock to a target training loss — the async path's
+whole point is buying back the straggler tail on that second axis.
+
   PYTHONPATH=src python -m benchmarks.fleet_bench            # default sweep
   PYTHONPATH=src python -m benchmarks.fleet_bench --clients 5,1000,10000
+  PYTHONPATH=src python -m benchmarks.fleet_bench --compare  # sync vs async
   PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # CI-sized
 
-Writes ``fleet_bench.csv`` via the shared benchmark plumbing.
+Writes ``fleet_bench.csv`` (sweep) / ``fleet_async_bench.csv`` (compare)
+via the shared benchmark plumbing.
 """
 
 from __future__ import annotations
@@ -24,8 +32,8 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.fleet import FleetConfig, FleetTopology
-from repro.fleet.engine import build_simulation
+from repro.fleet import AsyncConfig, FleetConfig, FleetTopology
+from repro.fleet.engine import build_simulation, time_to_loss
 
 
 def _fleet_shape(clients: int) -> tuple[int, int]:
@@ -70,14 +78,108 @@ def bench_one(clients: int, rounds: int, seed: int = 0) -> dict:
     }
 
 
+def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
+               buffer_frac: float = 0.25, target_loss: float = 1.8,
+               deadline_s: float = 8.0) -> dict:
+    """Time one engine mode on a straggler-heavy fleet (wide CPU + distance
+    spread, so the sync barrier pays a long latency tail every round).
+
+    Both arms run time-triggered (same round deadline, same solver cap):
+    without it one deeply-faded client would stall the unbounded sync
+    barrier forever, which is the failure mode — not a benchmark.  Sync
+    drops late clients at the barrier; async never waits on them (staleness
+    weighting retires their updates instead).
+    """
+    from repro.fleet import ScheduleConfig
+
+    cells, per_cell = _fleet_shape(clients)
+    n = cells * per_cell
+    buffer = max(1, int(n * buffer_frac)) if mode == "async" else 0
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell,
+                               cpu_hz_range=(2e8, 8e9), max_dist_m=1500.0),
+        schedule=ScheduleConfig(round_deadline_s=deadline_s),
+        async_config=AsyncConfig(buffer_size=buffer, max_staleness=20),
+        rounds=rounds, seed=seed,
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+
+    sim = build_simulation(cfg, mode=mode)
+    t0 = time.perf_counter()
+    out = sim.simulate(sim.params, sim.round_keys)   # compile + run
+    jax.block_until_ready(out)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = sim.simulate(sim.params, sim.round_keys)   # compiled executable
+    jax.block_until_ready(out)
+    warm = time.perf_counter() - t0
+    res = sim.finalize(*out)
+
+    assert np.all(np.isfinite(res.losses)), f"non-finite losses ({mode})"
+    return {
+        "mode": mode,
+        "clients": clients,
+        "rounds": rounds,
+        "buffer": buffer,
+        "compile_s": cold - warm,
+        "run_s": warm,
+        "rounds_per_s": rounds / warm,
+        "sim_wall_s": float(res.wall_clock[-1]),
+        "sim_s_to_loss": time_to_loss(res, target_loss),
+        "final_loss": float(res.losses[-1]),
+        "mean_staleness": float(np.mean(res.staleness)),
+    }
+
+
+def run_compare(counts: list[int], rounds: int, target_loss: float) -> None:
+    """Sync-vs-async table: host throughput + simulated time-to-target."""
+    header = ["mode", "clients", "rounds", "buffer", "compile_s", "run_s",
+              "rounds_per_s", "sim_wall_s", "sim_s_to_loss", "final_loss",
+              "mean_staleness"]
+    rows = []
+    for clients in counts:
+        pair = {}
+        for mode in ("sync", "async"):
+            r = bench_mode(clients, rounds, mode, target_loss=target_loss)
+            pair[mode] = r
+            rows.append([r[h] for h in header])
+            print(f"{mode:>5s} clients={clients:>7d} "
+                  f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
+                  f"{r['rounds_per_s']:8.2f} rounds/s "
+                  f"sim_wall={r['sim_wall_s']:8.1f}s "
+                  f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s "
+                  f"stale={r['mean_staleness']:4.1f}")
+        s, a = pair["sync"]["sim_s_to_loss"], pair["async"]["sim_s_to_loss"]
+        if np.isfinite(s) and np.isfinite(a) and a > 0 and s > 0:
+            word = "sooner" if s >= a else "LATER"
+            ratio = s / a if s >= a else a / s
+            print(f"      clients={clients:>7d} async reaches "
+                  f"loss<{target_loss} {ratio:.2f}x {word} (simulated)")
+    path = common.write_csv("fleet_async_bench.csv", header, rows)
+    print(f"wrote {path}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--clients", default="5,100,1000,10000",
                     help="comma-separated client counts (try up to 100000)")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--compare", action="store_true",
+                    help="sync vs async buffered aggregation comparison")
+    ap.add_argument("--target-loss", type=float, default=1.8,
+                    help="--compare: simulated-time-to-loss threshold")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: 2 tiny fleets, 3 rounds")
     args = ap.parse_args()
+
+    if args.compare:
+        if args.smoke:
+            counts, rounds = [64], 5
+        else:
+            counts = ([10000] if args.clients == "5,100,1000,10000"
+                      else [int(c) for c in args.clients.split(",")])
+            rounds = 50 if args.rounds == 20 else args.rounds
+        run_compare(counts, rounds, args.target_loss)
+        return
 
     if args.smoke:
         counts, rounds = [16, 64], 3

@@ -1,0 +1,53 @@
+"""Check internal markdown links in README.md and docs/*.md.
+
+Every relative link target (``[text](path)`` where path is not an
+http(s)/mailto URL or a pure ``#anchor``) must exist on disk, resolved
+against the file containing the link.  Used by the CI docs job:
+
+  python docs/check_links.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(root: pathlib.Path) -> list[str]:
+    errors = []
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md.relative_to(root)}: file missing")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:        # pure in-page anchor
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: broken link "
+                        f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(__file__).resolve().parent.parent
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n = sum(1 for _ in (root / "docs").glob("*.md")) + 1
+    print(f"checked {n} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

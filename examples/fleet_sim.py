@@ -2,13 +2,17 @@
 
 Runs the scan-compiled fleet engine (multi-cell channels, on-device
 closed-form trade-off control, partial participation / stragglers /
-deadlines) and prints a round-by-round and final summary.
+deadlines, sync or FedBuff-style async aggregation) and prints a
+round-by-round and final summary.
 
   PYTHONPATH=src python examples/fleet_sim.py
   PYTHONPATH=src python examples/fleet_sim.py --cells 100 --per-cell 100 \\
       --rounds 50 --participation weighted --participants 32
   PYTHONPATH=src python examples/fleet_sim.py --deadline 0.8 --stragglers 0.1
+  PYTHONPATH=src python examples/fleet_sim.py --async --buffer 256 \\
+      --max-staleness 20           # buffered aggregation, no round barrier
   PYTHONPATH=src python examples/fleet_sim.py --mesh   # shard cells on "data"
+  PYTHONPATH=src python examples/fleet_sim.py --smoke  # CI-sized sanity run
 """
 
 from __future__ import annotations
@@ -19,15 +23,16 @@ import time
 
 import numpy as np
 
-from repro.fleet import (FleetConfig, FleetTopology, ScheduleConfig,
-                         run_fleet)
+from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
+                         ScheduleConfig, run_fleet)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cells", type=int, default=16)
     ap.add_argument("--per-cell", type=int, default=64)
-    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--rounds", type=int, default=30,
+                    help="sync rounds / async server aggregation events")
     ap.add_argument("--weight", type=float, default=0.0004,
                     help="lambda: latency vs learning trade-off")
     ap.add_argument("--participation", default="full",
@@ -38,12 +43,28 @@ def main() -> None:
                     help="i.i.d. per-round client dropout probability")
     ap.add_argument("--deadline", type=float, default=math.inf,
                     help="hard round deadline in seconds (time-triggered FL)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="FedBuff-style buffered aggregation (no barrier)")
+    ap.add_argument("--buffer", type=int, default=64,
+                    help="async: updates merged per server event (0 = all)")
+    ap.add_argument("--max-staleness", type=int, default=20,
+                    help="async: drop updates older than this many versions")
+    ap.add_argument("--staleness-discount", default="polynomial",
+                    choices=["none", "polynomial", "exponential"],
+                    help="async: merge-weight discount schedule s(tau)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="async: discount strength alpha")
     ap.add_argument("--cell-chunk", type=int, default=0,
                     help="cells per gradient-accumulation chunk (memory cap)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", action="store_true",
                     help="shard the cell axis over the host mesh")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: 2 cells x 8 clients, 3 rounds")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.cells, args.per_cell, args.rounds = 2, 8, 3
 
     cfg = FleetConfig(
         topology=FleetTopology(num_cells=args.cells,
@@ -52,6 +73,10 @@ def main() -> None:
                                 participants_per_cell=args.participants,
                                 straggler_prob=args.stragglers,
                                 round_deadline_s=args.deadline),
+        async_config=AsyncConfig(buffer_size=args.buffer,
+                                 max_staleness=args.max_staleness,
+                                 staleness_discount=args.staleness_discount,
+                                 staleness_alpha=args.staleness_alpha),
         weight=args.weight, rounds=args.rounds, seed=args.seed,
         cell_chunk=args.cell_chunk)
 
@@ -60,21 +85,26 @@ def main() -> None:
         from repro.launch import mesh as MESH
         mesh = MESH.make_host_mesh(model=1)
 
+    mode = "async" if args.async_mode else "sync"
     n = cfg.topology.num_clients
+    unit = "events" if mode == "async" else "rounds"
     print(f"fleet: {args.cells} cells x {args.per_cell} clients = {n} UEs, "
-          f"{args.rounds} rounds, lambda={args.weight}")
+          f"{args.rounds} {unit}, lambda={args.weight}, mode={mode}")
     t0 = time.time()
-    res = run_fleet(cfg, mesh=mesh, progress=True)
+    res = run_fleet(cfg, mesh=mesh, progress=True, mode=mode)
     wall = time.time() - t0
 
-    print(f"\n{args.rounds} rounds in {wall:.1f}s "
-          f"({args.rounds / wall:.2f} rounds/s incl. compile)")
+    print(f"\n{args.rounds} {unit} in {wall:.1f}s "
+          f"({args.rounds / wall:.2f} {unit}/s incl. compile)")
     print(f"final loss {res.losses[-1]:.4f}  accuracy {res.accuracy[-1]:.4f}")
     print(f"mean round latency {np.mean(res.latencies):.3f}s  "
           f"mean rho {np.mean(res.mean_prune):.3f}  "
           f"mean eff. PER {np.mean(res.mean_per):.4f}")
     print(f"mean participants/round {np.mean(res.participants):.1f} / {n}")
     print(f"bandwidth utilization {np.mean(res.bandwidth_util):.3f}")
+    print(f"simulated wall-clock {res.wall_clock[-1]:.1f}s")
+    if mode == "async":
+        print(f"mean merge staleness {np.mean(res.staleness):.2f} versions")
     print(f"Theorem-1 bound on realized averages: {res.bound_final:.4f}")
 
 

@@ -1,11 +1,27 @@
-"""Packet-error-aware global aggregation (paper Eq. (5)/(6)).
+"""Packet-error-aware global aggregation (paper Eq. (5)/(6)) + FedBuff merge.
+
+Synchronous rule (the paper's):
 
   g_s = sum_i K_i grad_i C_i  /  sum_i K_i C_i,
   C_i = 1 w.p. (1 - q_i),  0 w.p. q_i   (errored packet -> dropped)
 
-Two execution paths:
+Asynchronous buffered rule (FedBuff-style, used by the fleet engine's
+``mode="async"`` path): each buffered update additionally carries a
+*staleness* tau_i — the number of server versions applied since the client
+downloaded its model — and merges with a discounted weight
 
-* ``aggregate``       — host/single-device: takes stacked per-client grads.
+  w_i = K_i C_i s(tau_i) 1{tau_i <= tau_max},
+  g   = sum_i w_i grad_i / sum_i w_i,
+
+where ``s`` is the staleness-discount schedule (``staleness_scale``).  The
+sync rule is the tau = 0, tau_max >= 0 special case — ``buffered_aggregate``
+with zero staleness reduces exactly to ``aggregate``.
+
+Execution paths:
+
+* ``aggregate`` / ``buffered_aggregate`` — xp-generic on stacked per-client
+  grads: the numpy host reference and the jax fleet engine share this one
+  implementation (equivalence-tested, like ``core.closed_form``).
 * ``psum_aggregate``  — device-side body for shard_map: each client shard
   contributes K_i * C_i * grad_i and a single ``psum`` over the client
   mesh axes forms numerator and denominator (the BS reduce).
@@ -15,10 +31,19 @@ from __future__ import annotations
 
 from typing import Any
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sample_arrivals", "aggregate", "psum_aggregate"]
+__all__ = [
+    "sample_arrivals",
+    "aggregate",
+    "staleness_scale",
+    "buffered_weights",
+    "buffered_aggregate",
+    "psum_aggregate",
+]
 
 PyTree = Any
 
@@ -37,12 +62,81 @@ def aggregate(client_grads: PyTree, num_samples: jnp.ndarray,
     """
     w = jnp.asarray(num_samples, jnp.float32) * arrivals      # K_i C_i
     denom = jnp.sum(w)
-    safe = jnp.maximum(denom, 1.0)
+    safe = jnp.where(denom > 0.0, denom, 1.0)
 
     def reduce(leaf: jnp.ndarray) -> jnp.ndarray:
         shape = (-1,) + (1,) * (leaf.ndim - 1)
         num = jnp.sum(leaf * w.reshape(shape), axis=0)
         return jnp.where(denom > 0.0, num / safe, jnp.zeros_like(num))
+
+    return jax.tree.map(reduce, client_grads)
+
+
+def staleness_scale(staleness, kind: str = "polynomial", alpha: float = 0.5,
+                    xp=jnp):
+    """FedBuff discount s(tau) applied to a buffered update of age ``tau``.
+
+    Args:
+      staleness: tau, server versions elapsed since the contributing client
+        downloaded its model (dimensionless count; any shape).
+      kind: ``"none"`` (s = 1), ``"polynomial"`` (s = (1 + tau)^-alpha, the
+        FedBuff default with alpha = 0.5), or ``"exponential"``
+        (s = exp(-alpha tau)).
+      alpha: decay strength (dimensionless, >= 0).
+      xp: array namespace (``numpy`` or ``jax.numpy``).
+
+    Returns:
+      s(tau) in (0, 1], same shape as ``staleness``; s(0) = 1 for every
+      schedule, so zero-staleness async merging matches the sync rule.
+    """
+    tau = xp.asarray(staleness, dtype=float)
+    tau = xp.maximum(tau, 0.0)
+    if kind == "none":
+        return xp.ones_like(tau)
+    if kind == "polynomial":
+        return (1.0 + tau) ** (-alpha)
+    if kind == "exponential":
+        return xp.exp(-alpha * tau)
+    raise ValueError(f"unknown staleness discount {kind!r}")
+
+
+def buffered_weights(num_samples, arrivals, staleness, *,
+                     kind: str = "polynomial", alpha: float = 0.5,
+                     max_staleness: int = 20, xp=jnp):
+    """Merge weights w_i = K_i C_i s(tau_i) 1{tau_i <= tau_max}.
+
+    The single definition of the staleness-discounted aggregation weight,
+    shared by the numpy reference (``buffered_aggregate``) and the jax
+    fleet engine (which folds the same weights into its gradient einsum).
+    Updates older than ``max_staleness`` versions are dropped (weight 0).
+    """
+    k = xp.asarray(num_samples, dtype=float)
+    s = staleness_scale(staleness, kind=kind, alpha=alpha, xp=xp)
+    fresh = (xp.asarray(staleness) <= max_staleness)
+    return k * xp.asarray(arrivals) * s * fresh.astype(k.dtype)
+
+
+def buffered_aggregate(client_grads: PyTree, num_samples, arrivals,
+                       staleness, *, kind: str = "polynomial",
+                       alpha: float = 0.5, max_staleness: int = 20,
+                       xp=jnp) -> PyTree:
+    """FedBuff merge on stacked gradients: every leaf has leading client dim.
+
+    With ``staleness = 0`` everywhere this is exactly ``aggregate`` (Eq. 5).
+    As there, an all-dropped buffer (zero total weight) yields a zero
+    gradient — the server skips the version bump's update.
+    """
+    w = buffered_weights(num_samples, arrivals, staleness, kind=kind,
+                         alpha=alpha, max_staleness=max_staleness, xp=xp)
+    denom = xp.sum(w)
+    # Guard only the all-dropped case: the discounted total can land in
+    # (0, 1), where a max(denom, 1) clamp would silently shrink the mean.
+    safe = xp.where(denom > 0.0, denom, 1.0)
+
+    def reduce(leaf):
+        shape = (-1,) + (1,) * (leaf.ndim - 1)
+        num = xp.sum(leaf * w.reshape(shape), axis=0)
+        return xp.where(denom > 0.0, num / safe, xp.zeros_like(num))
 
     return jax.tree.map(reduce, client_grads)
 
@@ -56,7 +150,7 @@ def psum_aggregate(local_grad: PyTree, k_i: jnp.ndarray, c_i: jnp.ndarray,
     """
     w = k_i * c_i
     denom = jax.lax.psum(w, axis_names)
-    safe = jnp.maximum(denom, 1.0)
+    safe = jnp.where(denom > 0.0, denom, 1.0)
 
     def reduce(leaf: jnp.ndarray) -> jnp.ndarray:
         num = jax.lax.psum(leaf * w, axis_names)

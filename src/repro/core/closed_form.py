@@ -68,7 +68,12 @@ def _iterate(body, state, n: int, xp, done=None):
 # ---------------------------------------------------------------------------
 
 def uplink_rate(bandwidth, tx_power, h_up, noise_psd, xp=np):
-    """Eq. (3): R_i^u = B_i log2(1 + p_i h_i^u / (B_i N0)); 0 at B_i = 0."""
+    """Eq. (3): R_i^u = B_i log2(1 + p_i h_i^u / (B_i N0)); 0 at B_i = 0.
+
+    Units: ``bandwidth`` Hz, ``tx_power`` W, ``h_up`` linear power gain
+    (dimensionless; convert dB as 10^(-dB/10)), ``noise_psd`` W/Hz.
+    Returns the achievable rate in bits/second.
+    """
     b = _f(bandwidth, xp)
     with np.errstate(divide="ignore", invalid="ignore"):
         snr = _f(tx_power, xp) * _f(h_up, xp) / (b * noise_psd)
@@ -77,25 +82,42 @@ def uplink_rate(bandwidth, tx_power, h_up, noise_psd, xp=np):
 
 
 def downlink_rate(bandwidth_hz, tx_power_bs, h_down, noise_psd, xp=np):
-    """Eq. (1): the broadcast uses the full bandwidth B."""
+    """Eq. (1): the broadcast uses the full bandwidth B.
+
+    Units: ``bandwidth_hz`` Hz, ``tx_power_bs`` W, ``h_down`` linear power
+    gain, ``noise_psd`` W/Hz; returns bits/second.
+    """
     snr = tx_power_bs * _f(h_down, xp) / (bandwidth_hz * noise_psd)
     return bandwidth_hz * xp.log2(1.0 + snr)
 
 
 def packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0, xp=np):
-    """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)); increasing in B_i (Lemma 1)."""
+    """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)); increasing in B_i (Lemma 1).
+
+    Units: ``bandwidth`` Hz, ``tx_power`` W, ``h_up`` linear gain,
+    ``noise_psd`` W/Hz, ``m0`` the dimensionless waterfall threshold;
+    returns a probability in [0, 1).
+    """
     b = _f(bandwidth, xp)
     return 1.0 - xp.exp(-m0 * b * noise_psd / (_f(tx_power, xp) * _f(h_up, xp)))
 
 
 def training_latency(prune_rate, num_samples, cycles_per_sample, cpu_hz, xp=np):
-    """Eq. (2): t_i^c = (1 - rho_i) K_i d^c / f_i."""
+    """Eq. (2): t_i^c = (1 - rho_i) K_i d^c / f_i.
+
+    Units: ``prune_rate`` in [0, 1], ``num_samples`` samples,
+    ``cycles_per_sample`` CPU cycles/sample, ``cpu_hz`` cycles/second (Hz);
+    returns seconds.
+    """
     return (1.0 - _f(prune_rate, xp)) * _f(num_samples, xp) \
         * cycles_per_sample / _f(cpu_hz, xp)
 
 
 def upload_latency(prune_rate, model_bits, rate_up, xp=np):
-    """t_i^u = (1 - rho_i) D_M / R_i^u; inf when the rate is 0."""
+    """t_i^u = (1 - rho_i) D_M / R_i^u; inf when the rate is 0.
+
+    Units: ``model_bits`` bits, ``rate_up`` bits/second; returns seconds.
+    """
     r = _f(rate_up, xp)
     with np.errstate(divide="ignore"):
         t = (1.0 - _f(prune_rate, xp)) * model_bits / r
@@ -107,7 +129,11 @@ def upload_latency(prune_rate, model_bits, rate_up, xp=np):
 # ---------------------------------------------------------------------------
 
 def prune_rates_for_deadline(t_np, deadline, xp=np):
-    """Eq. (16): rho_i^min(t~) = max{1 - t~/t_i^np, 0}."""
+    """Eq. (16): rho_i^min(t~) = max{1 - t~/t_i^np, 0}.
+
+    Both ``t_np`` (per-client no-pruning latency) and ``deadline`` are in
+    seconds; returns pruning rates in [0, 1].
+    """
     return xp.maximum(1.0 - deadline / _f(t_np, xp), 0.0)
 
 
@@ -126,6 +152,10 @@ def pruning_vertex(t_np, num_samples, weight, m, max_prune, xp=np, mask=None):
     clients from the vertex set, the slope and the returned rates.
     Returns ``(t_star, rho)``; an infinite t~max (some UE with zero uplink
     rate) degenerates to ``(inf, ones)`` exactly as the original solver did.
+
+    Units: ``t_np`` seconds, ``num_samples`` samples, ``weight`` the
+    dimensionless lambda, ``m`` 1/samples, ``max_prune`` in [0, 1];
+    returns (t~* in seconds, rho* in [0, 1]).
     """
     t_np = _f(t_np, xp)
     k = _f(num_samples, xp)
@@ -204,6 +234,9 @@ def min_bandwidth_for_rates(target_rate, tx_power, h_up, noise_psd,
     a capacity-based guess (masked doubling — the numpy path early-exits
     once every feasible lane is bracketed, the jax path runs the fixed
     count, which is a no-op after bracketing).
+
+    Units: ``target_rate`` bits/second, ``tx_power`` W, ``h_up`` linear
+    gain, ``noise_psd`` W/Hz; returns the minimum bandwidth in Hz.
     """
     target, p, h = xp.broadcast_arrays(_f(target_rate, xp), _f(tx_power, xp),
                                        _f(h_up, xp))
@@ -257,6 +290,10 @@ def bandwidth_for_deadline(prune, deadline, num_samples, cpu_hz,
     ``deadline`` broadcasts against it (a missing trailing client dim is
     added).  Zero payload -> 0 bandwidth; positive payload with no slack
     -> inf (infeasible deadline).
+
+    Units: ``deadline`` seconds, ``num_samples`` samples, ``cpu_hz`` Hz,
+    ``cycles_per_sample`` cycles/sample, ``model_bits`` bits, ``tx_power``
+    W, ``h_up`` linear gain, ``noise_psd`` W/Hz; returns Hz.
     """
     prune = _f(prune, xp)
     deadline = _f(deadline, xp)
@@ -285,6 +322,10 @@ def surrogate_m(num_samples, beta, xi1, xi2, weight_bound, xp=np, mask=None):
 
     With ``mask``, the population (I, K) is the participating subset —
     the fleet engine's per-cell surrogate.  Reduces over the last axis.
+
+    Units: ``num_samples`` samples; beta, xi1, xi2, ``weight_bound`` (D)
+    are the dimensionless Assumption-1/2 constants.  Returns m in
+    1/samples, so m K_i (q_i + K_i rho_i) is a dimensionless cost.
     """
     k = _f(num_samples, xp)
     if mask is not None:

@@ -3,10 +3,14 @@
 Scales the paper's 5-UE Table-I system to 10k-1M clients: batched
 multi-cell channel generation (`topology`), the closed-form trade-off
 solver vmapped over cells on-device (`solver`), partial participation /
-stragglers / round deadlines (`scheduler`), and the full round compiled as
-a single `jax.lax.scan` with no host round-trips (`engine`).
+stragglers / round deadlines / async arrival times (`scheduler`), and the
+full round compiled as a single `jax.lax.scan` with no host round-trips
+(`engine`).  Two aggregation modes: the paper's synchronous FedSGD barrier
+(default) and FedBuff-style buffered aggregation with staleness-discounted
+merging (``run_fleet(..., mode="async")``, configured by ``AsyncConfig``).
 """
 
-from repro.fleet.engine import FleetConfig, FleetResult, run_fleet  # noqa: F401
-from repro.fleet.scheduler import ScheduleConfig  # noqa: F401
+from repro.fleet.engine import (  # noqa: F401
+    FleetConfig, FleetResult, build_simulation, run, run_fleet, time_to_loss)
+from repro.fleet.scheduler import AsyncConfig, ScheduleConfig  # noqa: F401
 from repro.fleet.topology import FleetTopology  # noqa: F401

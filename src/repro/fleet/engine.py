@@ -8,14 +8,29 @@ and track latency / convergence-bound statistics.  The entire ``rounds``
 loop compiles as a single ``jax.lax.scan`` — zero host round-trips, which
 is what lets 10k-1M-client runs approach hardware speed.
 
+Two aggregation modes share the per-round control path (``_round_control``):
+
+* ``mode="sync"`` (default) — the paper's FedSGD barrier: every scheduled
+  client reports before the server updates, so the round lasts as long as
+  the slowest uplink (Eq. 4 makespan).
+* ``mode="async"`` — FedBuff-style buffered aggregation: clients report at
+  their *own* realized latency (``scheduler.arrival_times``); each scan
+  step is one server event that merges the earliest ``buffer_size``
+  arrivals with staleness-discounted weights
+  (``core.aggregation.buffered_weights``) against a ring buffer of the
+  last ``max_staleness + 1`` param versions.  With ``buffer_size = 0``
+  (whole cohort) and full participation the event timeline degenerates to
+  the round barrier and async equals sync (equivalence-tested).
+
 Data/model: a deterministic synthetic classification task (per-class
 Gaussian templates).  Each client's local batch regenerates on the fly
 every round from a *fixed* per-client fold of the data key — identical
 samples each round (the FL fixed-local-dataset setting) without holding a
 (clients x batch x dim) tensor resident; memory is bounded by the optional
-cell-chunked gradient accumulation.  Local batches share one static size
-``local_batch`` (shape-uniform for vmap); the heterogeneous K_i act through
-aggregation weights and the latency model, as in the paper's Eqs. (2)-(5).
+cell-chunked gradient accumulation (sync) or by ``buffer_size`` (async).
+Local batches share one static size ``local_batch`` (shape-uniform for
+vmap); the heterogeneous K_i act through aggregation weights and the
+latency model, as in the paper's Eqs. (2)-(5).
 
 Sharding: pass a mesh from ``launch.mesh`` and the cell axis of every
 population/fading tensor is placed on the mesh's "data" axis
@@ -25,13 +40,14 @@ population/fading tensor is placed on the mesh's "data" axis
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import aggregation as AGG
 from repro.core import closed_form as CF
 from repro.core import pruning, wireless
 from repro.core.convergence import ConvergenceBound, SmoothnessParams
@@ -45,10 +61,16 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class FleetConfig:
+    """Everything a fleet run needs; all fields have Table-I-flavoured
+    defaults.  Units: seconds / Hz / watts follow ``wireless.WirelessConfig``;
+    ``weight`` is the dimensionless trade-off lambda of problem (12)."""
+
     topology: TOPO.FleetTopology = dataclasses.field(
         default_factory=TOPO.FleetTopology)
     schedule: SCHED.ScheduleConfig = dataclasses.field(
         default_factory=SCHED.ScheduleConfig)
+    async_config: SCHED.AsyncConfig = dataclasses.field(
+        default_factory=SCHED.AsyncConfig)
     wireless: wireless.WirelessConfig = dataclasses.field(
         default_factory=wireless.WirelessConfig)
     smoothness: SmoothnessParams = dataclasses.field(
@@ -56,7 +78,7 @@ class FleetConfig:
     solver: SOLVER.SolverConfig = dataclasses.field(
         default_factory=SOLVER.SolverConfig)
     weight: float = 0.0004            # lambda
-    rounds: int = 50
+    rounds: int = 50                  # sync rounds / async server events
     lr: float = 1e-2
     seed: int = 0
     # synthetic task (kept small: the engine's subject is the system, and
@@ -73,10 +95,19 @@ class FleetConfig:
 
 @dataclasses.dataclass
 class FleetResult:
+    """Per-round (sync) / per-server-event (async) trajectories.
+
+    ``latencies`` is the realized duration of each round/event in seconds;
+    ``wall_clock`` is its cumulative sum — the simulated time axis, which
+    is what makes sync-vs-async time-to-target-loss comparable.
+    ``staleness`` is the cohort-mean merge age in server versions (all
+    zeros for sync).
+    """
+
     losses: np.ndarray            # (rounds,)
     accuracy: np.ndarray          # (rounds,)
-    latencies: np.ndarray         # (rounds,) realized round latency (Eq. 4)
-    deadlines: np.ndarray         # (rounds, C) solver deadlines t~*
+    latencies: np.ndarray         # (rounds,) realized round latency, s (Eq. 4)
+    deadlines: np.ndarray         # (rounds, C) solver deadlines t~*, s
     mean_prune: np.ndarray        # (rounds,) scheduled-client mean rho
     mean_per: np.ndarray          # (rounds,) effective per-client loss prob
     participants: np.ndarray      # (rounds,) clients aggregated per round
@@ -84,6 +115,9 @@ class FleetResult:
     learning_cost: np.ndarray     # (rounds,) m-weighted Eq. (11) sum, fleet
     bound_final: float            # Theorem 1 on realized averages
     params: PyTree
+    wall_clock: np.ndarray = None  # (rounds,) cumulative simulated time, s
+    staleness: np.ndarray = None   # (rounds,) mean merge age, versions
+    mode: str = "sync"
 
 
 def _class_templates(key: jax.Array, num_classes: int, dim: int) -> jnp.ndarray:
@@ -162,14 +196,27 @@ def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
     return g_wsum, w_sum, mean_loss
 
 
-def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
-                   templates: jnp.ndarray, data_key: jax.Array,
-                   x_test: jnp.ndarray, y_test: jnp.ndarray):
+class RoundControl(NamedTuple):
+    """One key's worth of per-round system state, identical for both modes:
+    channel draw, schedule draw, solver output, realized latencies."""
+
+    mask: jnp.ndarray       # (C, I) participation
+    strag: jnp.ndarray      # (C, I) survived straggler churn
+    arrivals: jnp.ndarray   # (C, I) packet success indicators (pre-masking)
+    sol: SOLVER.CellSolution
+    t_client: jnp.ndarray   # (C, I) realized downlink+compute+uplink, s
+    m_round: jnp.ndarray    # (C,) scheduled-subset Eq.-(11) coefficient
+
+
+def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation):
+    """Build the per-key control pass shared by the sync round and the
+    async start/restart: fading -> schedule -> solver -> latency -> packet
+    draws.  Both modes consume keys in the same order, which is what makes
+    the buffer-equals-cohort async run reproduce sync draws exactly."""
     w = cfg.wireless
     n0, b_hz = w.noise_psd_w_per_hz, w.bandwidth_hz
 
-    def round_fn(carry, rkey):
-        params, per_sum, prune_sum = carry
+    def control(rkey: jax.Array) -> RoundControl:
         k_fade, k_part, k_strag, k_arr = jax.random.split(rkey, 4)
 
         h_up, h_down = TOPO.sample_fading(k_fade, pop.pathloss)
@@ -208,18 +255,41 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         t_client = t_d + t_c + t_u
 
         strag = SCHED.straggler_mask(k_strag, cfg.schedule, mask.shape)
+        # Packet indicators C_i ~ Bernoulli(1 - q_i), drawn up-front (the
+        # outcome is decided at transmission; async merges it later).
+        arrivals = (jax.random.uniform(k_arr, sol.per.shape)
+                    >= sol.per).astype(jnp.result_type(float))
+        return RoundControl(mask=mask, strag=strag, arrivals=arrivals,
+                            sol=sol, t_client=t_client, m_round=m_round)
+
+    return control
+
+
+# ---------------------------------------------------------------------------
+# Synchronous (barrier) rounds
+# ---------------------------------------------------------------------------
+
+def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
+                   templates: jnp.ndarray, data_key: jax.Array,
+                   x_test: jnp.ndarray, y_test: jnp.ndarray):
+    w = cfg.wireless
+    b_hz = w.bandwidth_hz
+    control = _make_control_fn(cfg, pop)
+
+    def round_fn(carry, rkey):
+        params, per_sum, prune_sum = carry
+        ctl = control(rkey)
+        mask, sol, t_client = ctl.mask, ctl.sol, ctl.t_client
+
         on_time = SCHED.on_time_mask(t_client + w.aggregation_latency_s,
                                      cfg.schedule)
-        active = mask * strag * on_time
-
-        # Packet indicators C_i ~ Bernoulli(1 - q_i) on the active set.
-        arrivals = (jax.random.uniform(k_arr, sol.per.shape)
-                    >= sol.per).astype(jnp.float32) * active
+        active = mask * ctl.strag * on_time
+        arrivals = ctl.arrivals * active
         agg_w = pop.num_samples * arrivals                      # K_i C_i
 
         g_wsum, w_sum, mean_loss = _fleet_grads(
             params, sol.prune, agg_w, mask, data_key, templates, cfg)
-        denom = jnp.maximum(w_sum, 1.0)
+        denom = jnp.where(w_sum > 0, w_sum, 1.0)
         new_params = jax.tree.map(
             lambda p, g: jnp.where(w_sum > 0, p - cfg.lr * g / denom, p),
             params, g_wsum)
@@ -234,7 +304,7 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         q_eff = 1.0 - active * (1.0 - sol.per)
         k_all = pop.num_samples
         learning = jnp.sum(
-            m_round[:, None] * k_all * (q_eff + k_all * sol.prune) * mask)
+            ctl.m_round[:, None] * k_all * (q_eff + k_all * sol.prune) * mask)
         acc = mlp.accuracy(new_params, x_test, y_test)
 
         metrics = {
@@ -252,6 +322,170 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             metrics
 
     return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous (FedBuff-style buffered) events
+# ---------------------------------------------------------------------------
+
+class AsyncState(NamedTuple):
+    """Per-client in-flight state carried through the async scan.
+
+    Every (C, I) field describes the update each client is *currently*
+    computing/uploading; it is overwritten when the client restarts after
+    its update is merged.  The (C,) fields snapshot the per-cell solver
+    telemetry at the cohort's start so event metrics report the control
+    that actually produced the merged updates.
+    """
+
+    ready: jnp.ndarray        # (C, I) absolute arrival time, s
+    start_ver: jnp.ndarray    # (C, I) server version at download
+    rho: jnp.ndarray          # (C, I) pruning rate in flight
+    per: jnp.ndarray          # (C, I) solved packet error prob
+    sched: jnp.ndarray        # (C, I) participation mask at start
+    alive: jnp.ndarray        # (C, I) survived churn & finite latency
+    arrive: jnp.ndarray       # (C, I) packet success indicator
+    m_cell: jnp.ndarray       # (C,) surrogate m at start
+    deadline_c: jnp.ndarray   # (C,) solver deadline t~*, s
+    bwutil_c: jnp.ndarray     # (C,) sum B_i / B
+    per_sum: jnp.ndarray      # (C, I) Theorem-1 q accumulator
+    prune_sum: jnp.ndarray    # (C, I) Theorem-1 rho accumulator
+
+
+def _start_state(ctl: RoundControl, now, version, prev: Optional[AsyncState],
+                 coh: Optional[jnp.ndarray], cfg: FleetConfig) -> AsyncState:
+    """(Re)launch clients: cohort members (or everyone, at init) adopt the
+    fresh control draw and an arrival time at their own latency."""
+    b_hz = cfg.wireless.bandwidth_hz
+    ready = SCHED.arrival_times(now, ctl.t_client,
+                                cfg.async_config.retry_backoff_s)
+    alive = ctl.strag * jnp.isfinite(ctl.t_client).astype(
+        jnp.result_type(float))
+    new = AsyncState(
+        ready=ready,
+        start_ver=jnp.full(ctl.mask.shape, version, jnp.int32),
+        rho=ctl.sol.prune, per=ctl.sol.per, sched=ctl.mask, alive=alive,
+        arrive=ctl.arrivals, m_cell=ctl.m_round,
+        deadline_c=ctl.sol.deadline,
+        bwutil_c=jnp.sum(ctl.sol.bandwidth, axis=-1) / b_hz,
+        per_sum=jnp.zeros_like(ctl.mask),
+        prune_sum=jnp.zeros_like(ctl.mask))
+    if prev is None:
+        return new
+    pick = lambda n, p: jnp.where(coh > 0, n, p)
+    return AsyncState(
+        ready=pick(new.ready, prev.ready),
+        start_ver=pick(new.start_ver, prev.start_ver),
+        rho=pick(new.rho, prev.rho), per=pick(new.per, prev.per),
+        sched=pick(new.sched, prev.sched), alive=pick(new.alive, prev.alive),
+        arrive=pick(new.arrive, prev.arrive),
+        # per-cell telemetry refreshes with every solve (all cells resolve)
+        m_cell=new.m_cell, deadline_c=new.deadline_c, bwutil_c=new.bwutil_c,
+        per_sum=prev.per_sum, prune_sum=prev.prune_sum)
+
+
+def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
+                     templates: jnp.ndarray, data_key: jax.Array,
+                     x_test: jnp.ndarray, y_test: jnp.ndarray):
+    """One server event: fill the buffer with the K earliest arrivals,
+    merge them (staleness-discounted) against the param ring buffer, bump
+    the version, restart the merged clients with a fresh control draw."""
+    acfg = cfg.async_config
+    w = cfg.wireless
+    n = cfg.topology.num_clients
+    k_buf = acfg.cohort_buffer(n)
+    hist_len = acfg.history_len
+    control = _make_control_fn(cfg, pop)
+    k_flat = pop.num_samples.reshape(-1)
+
+    def gather(a: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
+        return a.reshape(-1)[sel]
+
+    def step(carry, rkey):
+        hist, head, version, now, st = carry
+
+        # -- 1. the buffer fills with the K earliest pending arrivals
+        sel, t_fill = SCHED.select_arrivals(st.ready, k_buf)
+        now2 = t_fill + w.aggregation_latency_s
+        coh = jnp.zeros((n,), dtype=float).at[sel].set(1.0) \
+            .reshape(st.ready.shape)
+
+        # -- 2. staleness-discounted merge weights (shared FedBuff rule)
+        tau = version - gather(st.start_ver, sel)
+        w_merge = AGG.buffered_weights(
+            k_flat[sel], gather(st.arrive * st.sched * st.alive, sel), tau,
+            kind=acfg.staleness_discount, alpha=acfg.staleness_alpha,
+            max_staleness=acfg.max_staleness, xp=jnp)
+
+        # -- 3. gradients at each client's *download* version (ring buffer)
+        def one(idx, rho_i, tau_i):
+            x, y = _client_batch(data_key, idx, templates, cfg.local_batch,
+                                 cfg.data_noise)
+            slot = (head - jnp.clip(tau_i, 0, hist_len - 1)) % hist_len
+            stale_params = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0,
+                                                       keepdims=False), hist)
+            return _client_grad(stale_params, rho_i, x, y)
+
+        losses, grads = jax.vmap(one)(sel, gather(st.rho, sel), tau)
+        g_wsum = jax.tree.map(
+            lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
+        w_sum = jnp.sum(w_merge)
+        denom = jnp.where(w_sum > 0, w_sum, 1.0)
+        params = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, head, 0,
+                                                   keepdims=False), hist)
+        new_params = jax.tree.map(
+            lambda p, g: jnp.where(w_sum > 0, p - cfg.lr * g / denom, p),
+            params, g_wsum)
+        version2 = version + 1
+        head2 = (head + 1) % hist_len
+        hist2 = jax.tree.map(
+            lambda a, p: jax.lax.dynamic_update_index_in_dim(a, p, head2, 0),
+            hist, new_params)
+
+        # -- 4. event metrics over the merged cohort (same definitions as
+        # the sync round, so buffer-equals-cohort trajectories coincide)
+        sched_coh = coh * st.sched
+        n_sched = jnp.maximum(jnp.sum(sched_coh), 1.0)
+        loss_w = gather(st.sched, sel)
+        mean_loss = jnp.sum(losses * loss_w) / jnp.maximum(jnp.sum(loss_w),
+                                                           1.0)
+        q_eff = 1.0 - st.sched * st.alive * (1.0 - st.per)
+        fresh = (tau <= acfg.max_staleness).astype(
+            jnp.result_type(float))
+        participants = jnp.sum(
+            gather(st.arrive * st.sched * st.alive, sel) * fresh)
+        k_all = pop.num_samples
+        learning = jnp.sum(jnp.where(
+            coh > 0,
+            st.m_cell[:, None] * k_all * (q_eff + k_all * st.rho) * st.sched,
+            0.0))
+        acc = mlp.accuracy(new_params, x_test, y_test)
+
+        per_sum2 = st.per_sum + jnp.where(coh > 0, q_eff, 1.0)
+        prune_sum2 = st.prune_sum + jnp.where(coh > 0, st.rho * st.sched, 0.0)
+
+        metrics = {
+            "loss": mean_loss,
+            "accuracy": acc,
+            "round_latency": now2 - now,
+            "deadline": st.deadline_c,
+            "mean_prune": jnp.sum(coh * st.rho * st.sched) / n_sched,
+            "mean_per": jnp.sum(coh * q_eff * st.sched) / n_sched,
+            "participants": participants,
+            "bandwidth_util": st.bwutil_c,
+            "learning_cost": learning,
+            "staleness": jnp.mean(tau.astype(jnp.result_type(float))),
+            "sim_time": now2,
+        }
+
+        # -- 5. merged clients re-download version2 and start a new cycle
+        st2 = _start_state(control(rkey), now2, version2, st, coh, cfg)
+        st2 = st2._replace(per_sum=per_sum2, prune_sum=prune_sum2)
+        return (hist2, head2, version2, now2, st2), metrics
+
+    return step
 
 
 def _shard_cells(tree, mesh):
@@ -272,9 +506,10 @@ def _shard_cells(tree, mesh):
 class Simulation:
     """A built (but not yet executed) fleet run.
 
-    ``simulate(params, round_keys)`` is the single jitted scan over rounds;
-    calling it again reuses the compiled executable (benchmarks time cold
-    vs warm this way).  ``finalize`` converts its output to a FleetResult.
+    ``simulate(params, round_keys)`` is the single jitted scan over rounds
+    (sync) or server events (async); calling it again reuses the compiled
+    executable (benchmarks time cold vs warm this way).  ``finalize``
+    converts its output to a FleetResult.
     """
 
     cfg: FleetConfig
@@ -282,18 +517,36 @@ class Simulation:
     params: PyTree
     round_keys: jnp.ndarray
     num_samples: jnp.ndarray
+    mode: str = "sync"
 
     def finalize(self, carry, metrics) -> FleetResult:
-        params, per_sum, prune_sum = carry
+        """Convert the scan output (device arrays) into a host FleetResult,
+        including the Theorem-1 bound on the realized (q, rho) averages."""
         cfg = self.cfg
+        if self.mode == "async":
+            hist, head, _, _, st = carry
+            params = jax.tree.map(
+                lambda a: np.asarray(a)[int(head)], hist)
+            per_sum, prune_sum = st.per_sum, st.prune_sum
+        else:
+            params, per_sum, prune_sum = carry
+            params = jax.tree.map(np.asarray, params)
         avg_per = np.asarray(per_sum).reshape(-1) / cfg.rounds
         avg_prune = np.asarray(prune_sum).reshape(-1) / cfg.rounds
         bound = ConvergenceBound(cfg.smoothness,
                                  np.asarray(self.num_samples).reshape(-1))
+        latencies = np.asarray(metrics["round_latency"])
+        if "sim_time" in metrics:
+            wall = np.asarray(metrics["sim_time"])
+        else:
+            wall = np.cumsum(latencies)
+        staleness = (np.asarray(metrics["staleness"])
+                     if "staleness" in metrics
+                     else np.zeros_like(latencies))
         return FleetResult(
             losses=np.asarray(metrics["loss"]),
             accuracy=np.asarray(metrics["accuracy"]),
-            latencies=np.asarray(metrics["round_latency"]),
+            latencies=latencies,
             deadlines=np.asarray(metrics["deadline"]),
             mean_prune=np.asarray(metrics["mean_prune"]),
             mean_per=np.asarray(metrics["mean_per"]),
@@ -301,12 +554,33 @@ class Simulation:
             bandwidth_util=np.asarray(metrics["bandwidth_util"]),
             learning_cost=np.asarray(metrics["learning_cost"]),
             bound_final=float(bound.bound(cfg.rounds, avg_per, avg_prune)),
-            params=jax.tree.map(np.asarray, params),
+            params=params,
+            wall_clock=wall,
+            staleness=staleness,
+            mode=self.mode,
         )
 
 
-def build_simulation(cfg: FleetConfig, mesh=None) -> Simulation:
-    """Drop the fleet, build the data/model, jit the round scan."""
+def build_simulation(cfg: FleetConfig, mesh=None,
+                     mode: str = "sync") -> Simulation:
+    """Drop the fleet, build the data/model, jit the round/event scan.
+
+    Args:
+      cfg: the run configuration (topology, schedule, wireless, solver).
+      mesh: optional ``launch.mesh`` mesh; the cell axis of every
+        population tensor is placed on its "data" axis.
+      mode: ``"sync"`` (FedSGD barrier rounds) or ``"async"`` (FedBuff
+        buffered events; see ``FleetConfig.async_config``).
+
+    Returns:
+      A ``Simulation`` whose ``simulate(params, round_keys)`` runs
+      ``cfg.rounds`` rounds/events as one compiled program.  Both modes
+      derive per-round keys from the same ``rounds + 1`` split so their
+      channel/schedule draws line up (async uses the extra key to launch
+      the initial cohort).
+    """
+    if mode not in ("sync", "async"):
+        raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
     topo = cfg.topology
     root = jax.random.PRNGKey(cfg.seed)
     k_pop, k_tmpl, k_init, k_test, k_data, k_rounds = jax.random.split(root, 6)
@@ -322,29 +596,62 @@ def build_simulation(cfg: FleetConfig, mesh=None) -> Simulation:
         kx, (cfg.test_samples, cfg.feature_dim))
 
     pop = _shard_cells(pop, mesh)
+    keys = jax.random.split(k_rounds, cfg.rounds + 1)
 
-    round_fn = _make_round_fn(cfg, pop, templates, k_data, x_test, y_test)
-    zeros_ci = jnp.zeros(topo.shape)
+    if mode == "sync":
+        round_fn = _make_round_fn(cfg, pop, templates, k_data, x_test, y_test)
+        zeros_ci = jnp.zeros(topo.shape)
 
-    @jax.jit
-    def simulate(params, round_keys):
-        return jax.lax.scan(round_fn, (params, zeros_ci, zeros_ci),
-                            round_keys)
+        @jax.jit
+        def simulate(params, round_keys):
+            return jax.lax.scan(round_fn, (params, zeros_ci, zeros_ci),
+                                round_keys)
+
+        round_keys = keys[:cfg.rounds]
+    else:
+        step_fn = _make_async_step(cfg, pop, templates, k_data, x_test,
+                                   y_test)
+        control = _make_control_fn(cfg, pop)
+        hist_len = cfg.async_config.history_len
+
+        @jax.jit
+        def simulate(params, round_keys):
+            # Launch the whole fleet at t = 0 with the first key, park the
+            # initial params in ring-buffer slot 0, then scan the events.
+            st0 = _start_state(control(round_keys[0]), jnp.zeros(()),
+                               jnp.asarray(0, jnp.int32), None, None, cfg)
+            hist0 = jax.tree.map(
+                lambda a: jnp.zeros((hist_len,) + a.shape,
+                                    a.dtype).at[0].set(a), params)
+            carry0 = (hist0, jnp.asarray(0, jnp.int32),
+                      jnp.asarray(0, jnp.int32), jnp.zeros(()), st0)
+            return jax.lax.scan(step_fn, carry0, round_keys[1:])
+
+        round_keys = keys
 
     return Simulation(cfg=cfg, simulate=simulate, params=params,
-                      round_keys=jax.random.split(k_rounds, cfg.rounds),
-                      num_samples=pop.num_samples)
+                      round_keys=round_keys, num_samples=pop.num_samples,
+                      mode=mode)
 
 
-def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False
-              ) -> FleetResult:
-    """Simulate ``cfg.rounds`` fleet FL rounds as one compiled scan.
+def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False,
+              mode: str = "sync") -> FleetResult:
+    """Simulate ``cfg.rounds`` fleet FL rounds/events as one compiled scan.
 
-    ``progress`` prints a per-round digest *after* the scan returns (the
-    whole run is one device program — there is nothing to stream from
-    inside it): every rounds//10-th round plus the final one.
+    Args:
+      cfg: run configuration; ``cfg.rounds`` counts synchronous rounds or
+        asynchronous server events depending on ``mode``.
+      mesh: optional device mesh (cells shard over its "data" axis).
+      progress: print a per-round digest *after* the scan returns (the
+        whole run is one device program — there is nothing to stream from
+        inside it): every rounds//10-th round plus the final one.
+      mode: ``"sync"`` or ``"async"`` (FedBuff buffered aggregation).
+
+    Returns:
+      A ``FleetResult``; trajectories are indexed by round (sync) or
+      server event (async), with ``wall_clock`` as the common time axis.
     """
-    sim = build_simulation(cfg, mesh=mesh)
+    sim = build_simulation(cfg, mesh=mesh, mode=mode)
     carry, metrics = sim.simulate(sim.params, sim.round_keys)
     jax.block_until_ready(metrics)
     result = sim.finalize(carry, metrics)
@@ -356,3 +663,21 @@ def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False
             print(f"[fleet] round {rnd:4d} loss={result.losses[rnd]:.4f} "
                   f"acc={result.accuracy[rnd]:.4f}")
     return result
+
+
+# ``engine.run(..., mode="async")`` reads naturally at call sites that
+# treat the mode as data; it is the same function.
+run = run_fleet
+
+
+def time_to_loss(result: FleetResult, target: float) -> float:
+    """Simulated seconds until the training loss first reaches ``target``.
+
+    Uses ``result.wall_clock`` (cumulative realized latency), so sync and
+    async runs compare on the same physical time axis.  Returns ``inf`` if
+    the run never reaches the target.
+    """
+    hit = np.flatnonzero(np.asarray(result.losses) <= target)
+    if hit.size == 0:
+        return float("inf")
+    return float(result.wall_clock[hit[0]])

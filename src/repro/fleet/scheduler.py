@@ -1,4 +1,4 @@
-"""Round scheduling: partial participation, stragglers, deadlines.
+"""Round scheduling: participation, stragglers, deadlines, async arrivals.
 
 Beyond-paper scenarios that only make sense at fleet scale (cf. the
 time-triggered FL of arXiv:2408.01765):
@@ -10,7 +10,12 @@ time-triggered FL of arXiv:2408.01765):
   the allocation (models churn the optimizer cannot see);
 * round deadline — a hard wall-clock cutoff: clients whose realized
   latency exceeds it are dropped from aggregation and the round is clamped
-  to the deadline.
+  to the deadline;
+* asynchronous arrivals — ``AsyncConfig`` + ``arrival_times`` /
+  ``select_arrivals`` model clients reporting back at their *own*
+  pruning-rate- and PER-dependent latency instead of a round barrier; the
+  engine's FedBuff-style buffered path aggregates the earliest
+  ``buffer_size`` arrivals per server event.
 
 All decisions are masks shaped (num_cells, clients_per_cell); nothing here
 touches the host.
@@ -23,6 +28,13 @@ import math
 
 import jax
 import jax.numpy as jnp
+
+# A client whose solved uplink rate is zero has infinite latency; in async
+# mode it must still occupy a finite spot on the arrival timeline (else the
+# buffer could wait forever).  Clamping to ~30 years keeps it finite while
+# guaranteeing its staleness exceeds any practical bound, so its update
+# merges with weight zero.
+MAX_CLIENT_LATENCY_S = 1e9
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +49,48 @@ class ScheduleConfig:
         return math.isfinite(self.round_deadline_s)
 
 
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the FedBuff-style buffered aggregation path.
+
+    ``buffer_size`` (K) — updates collected per server aggregation event;
+    0 means "the whole cohort", which (with zero staleness) makes async
+    bit-for-bit equivalent to the synchronous engine.  ``max_staleness``
+    (tau_max, in server versions) bounds how old a merged update may be —
+    it replaces the sync path's round deadline as the straggler control.
+    ``staleness_discount`` / ``staleness_alpha`` pick the discount schedule
+    s(tau) applied to each merge weight (see
+    ``core.aggregation.staleness_scale``).
+    """
+
+    buffer_size: int = 64               # K updates per aggregation (0 = all)
+    max_staleness: int = 20             # tau_max, in server versions
+    staleness_discount: str = "polynomial"   # none | polynomial | exponential
+    staleness_alpha: float = 0.5
+    retry_backoff_s: float = 60.0       # unschedulable clients re-register
+
+    def __post_init__(self):
+        if self.buffer_size < 0:
+            raise ValueError(f"buffer_size must be >= 0, got {self.buffer_size}")
+        if self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}")
+        if self.retry_backoff_s <= 0:
+            raise ValueError(
+                f"retry_backoff_s must be > 0, got {self.retry_backoff_s}")
+
+    @property
+    def history_len(self) -> int:
+        """Server param versions the engine must keep to serve any merge
+        with tau <= tau_max (ring-buffer length)."""
+        return self.max_staleness + 1
+
+    def cohort_buffer(self, num_clients: int) -> int:
+        """Resolve buffer_size = 0 to the full cohort."""
+        k = self.buffer_size if self.buffer_size > 0 else num_clients
+        return min(k, num_clients)
+
+
 def participation_mask(key: jax.Array, sched: ScheduleConfig,
                        num_samples: jnp.ndarray) -> jnp.ndarray:
     """(C, I) float mask of this round's scheduled clients.
@@ -47,7 +101,7 @@ def participation_mask(key: jax.Array, sched: ScheduleConfig,
     shape = num_samples.shape
     m = sched.participants_per_cell
     if sched.participation == "full" or m <= 0 or m >= shape[-1]:
-        return jnp.ones(shape, jnp.float32)
+        return jnp.ones(shape, dtype=float)
     if sched.participation == "uniform":
         logits = jnp.zeros(shape)
     elif sched.participation == "weighted":
@@ -56,24 +110,24 @@ def participation_mask(key: jax.Array, sched: ScheduleConfig,
         raise ValueError(f"unknown participation {sched.participation!r}")
     z = logits + jax.random.gumbel(key, shape)
     rank = jnp.argsort(jnp.argsort(-z, axis=-1), axis=-1)
-    return (rank < m).astype(jnp.float32)
+    return (rank < m).astype(jnp.result_type(float))
 
 
 def straggler_mask(key: jax.Array, sched: ScheduleConfig,
                    shape: tuple[int, ...]) -> jnp.ndarray:
     """(C, I) float mask of clients that did NOT straggle out this round."""
     if sched.straggler_prob <= 0.0:
-        return jnp.ones(shape, jnp.float32)
+        return jnp.ones(shape, dtype=float)
     return jax.random.bernoulli(
-        key, 1.0 - sched.straggler_prob, shape).astype(jnp.float32)
+        key, 1.0 - sched.straggler_prob, shape).astype(jnp.result_type(float))
 
 
 def on_time_mask(latency_s: jnp.ndarray, sched: ScheduleConfig) -> jnp.ndarray:
     """Clients whose realized latency beats the round deadline (all-ones
     when no deadline is configured; non-finite latencies always miss)."""
     if not sched.has_deadline:
-        return jnp.isfinite(latency_s).astype(jnp.float32)
-    return (latency_s <= sched.round_deadline_s).astype(jnp.float32)
+        return jnp.isfinite(latency_s).astype(jnp.result_type(float))
+    return (latency_s <= sched.round_deadline_s).astype(jnp.result_type(float))
 
 
 def clamp_round_latency(makespan_s: jnp.ndarray,
@@ -82,3 +136,41 @@ def clamp_round_latency(makespan_s: jnp.ndarray,
     if not sched.has_deadline:
         return makespan_s
     return jnp.minimum(makespan_s, sched.round_deadline_s)
+
+
+def arrival_times(start_time_s: jnp.ndarray, client_latency_s: jnp.ndarray,
+                  retry_s: float = MAX_CLIENT_LATENCY_S) -> jnp.ndarray:
+    """Absolute times (seconds) at which in-flight updates reach the server.
+
+    ``start_time_s`` is when each client downloaded the model (broadcast or
+    per-client); ``client_latency_s`` is its realized download + compute +
+    upload latency (Eq. 4 terms).  A non-finite latency means the client is
+    unschedulable this cycle (zero uplink rate, or sidelined by a binding
+    deadline cap); it re-registers after ``retry_s`` seconds instead —
+    dead-air it spends as a zero-weight buffer entry, not a stalled
+    timeline.  Being an absorbing state would slowly drain the pending
+    pool, so the backoff must be finite; everything is clamped to
+    ``MAX_CLIENT_LATENCY_S`` to keep the timeline totally ordered.
+    """
+    lat = jnp.where(jnp.isfinite(client_latency_s), client_latency_s,
+                    retry_s)
+    return start_time_s + jnp.minimum(lat, MAX_CLIENT_LATENCY_S)
+
+
+def select_arrivals(ready_time_s: jnp.ndarray,
+                    buffer_size: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The server's next aggregation event: the earliest K pending arrivals.
+
+    Args:
+      ready_time_s: (num_cells, clients_per_cell) absolute arrival times.
+      buffer_size: K, a static int (shapes must be trace-constant).
+
+    Returns:
+      ``(sel, t_event)`` where ``sel`` holds the K *flat* client indices of
+      the buffered cohort in arrival order (ties broken by index: argsort
+      is stable) and ``t_event`` is the K-th arrival time in seconds — the
+      instant the buffer fills and the server merges.
+    """
+    flat = ready_time_s.reshape(-1)
+    sel = jnp.argsort(flat)[:buffer_size]
+    return sel, flat[sel[-1]]

@@ -55,18 +55,39 @@ def solve_cell(h_up: jnp.ndarray, num_samples: jnp.ndarray,
                bandwidth_hz: float, noise_psd: float, waterfall_m0: float,
                model_bits: float, cycles_per_sample: float, weight: float,
                solver: SolverConfig = SolverConfig()) -> CellSolution:
-    """Algorithm 1 for one cell of I clients; all inputs shaped (I,).
+    """Algorithm 1 for one cell of I clients; all array inputs shaped (I,).
 
-    ``m`` is the cell's Eq.-(11) surrogate coefficient (see
-    ``closed_form.surrogate_m``); ``mask`` restricts the round to the
-    scheduled subset — non-participants get rho = 0, B = 0 and contribute
-    nothing to the vertex walk or the cost.
+    Args:
+      h_up: uplink power gains h_i^u (linear, dimensionless — NOT dB; the
+        urban path-loss model converts 128.1 + 37.6 log10(d_km) dB to
+        linear in ``topology.path_loss_linear``).
+      num_samples: local dataset sizes K_i (samples).
+      cpu_hz: client compute speeds f_i in cycles/second (Hz).
+      tx_power: client transmit powers p_i in watts.
+      max_prune: per-client pruning-rate ceilings rho_i^max in [0, 1].
+      m: the cell's Eq.-(11) surrogate coefficient (see
+        ``closed_form.surrogate_m``; units 1/samples so m K_i q_i is
+        dimensionless).
+      mask: optional (I,) participation mask — non-participants get
+        rho = 0, B = 0 and contribute nothing to the vertex walk or cost.
+      deadline_cap: optional scalar upper bound on the solved deadline t~
+        in seconds — the time-triggered-FL scenario (cf. arXiv:2408.01765):
+        the Eq.-(16) minimum pruning rates are re-derived at the capped
+        deadline, and clients that cannot meet it even at rho_i^max get
+        B = 0 (unschedulable this round) instead of an infinite allocation.
+      bandwidth_hz: cell uplink budget B in Hz.
+      noise_psd: noise power spectral density N0 in W/Hz.
+      waterfall_m0: waterfall PER constant m0 (dimensionless SNR threshold).
+      model_bits: uncompressed model payload D_M in bits.
+      cycles_per_sample: local-training cost d^c in CPU cycles per sample.
+      weight: the trade-off lambda in [0, 1] (dimensionless).
+      solver: static iteration counts / tolerance (``SolverConfig``).
 
-    ``deadline_cap`` (scalar) upper-bounds the solved deadline t~ — the
-    time-triggered-FL scenario (cf. arXiv:2408.01765): the Eq.-(16)
-    minimum pruning rates are re-derived at the capped deadline, and
-    clients that cannot meet it even at rho_i^max get B = 0 (unschedulable
-    this round) instead of an infinite allocation.
+    Returns:
+      A ``CellSolution``: pruning rates rho_i* in [0, 1], bandwidths B_i*
+      in Hz, deadline t~* in seconds, packet error probabilities
+      q_i(B_i*) in [0, 1], the Eq.-(14a) inner cost, alternations until
+      freeze, and a feasibility flag (finite B with sum B_i <= B).
     """
     lam = weight
     k = num_samples.astype(h_up.dtype)
@@ -150,8 +171,16 @@ def solve_fleet(h_up: jnp.ndarray, num_samples: jnp.ndarray,
                 solver: SolverConfig = SolverConfig()) -> CellSolution:
     """vmap of ``solve_cell`` over the leading cell axis.
 
-    Array args are (C, I) except ``m`` and ``deadline_cap`` which are (C,);
-    the whole fleet's per-round control resolves as one XLA program.
+    Array args are (C, I) except ``m`` (1/samples) and ``deadline_cap``
+    (seconds), which are (C,); scalars and units as in ``solve_cell``
+    (gains linear, bandwidth Hz, noise W/Hz, payload bits, power W).  The
+    whole fleet's per-round control resolves as one XLA program — each
+    cell owns an independent bandwidth budget ``bandwidth_hz``, so the
+    vmapped sub-problems never couple.
+
+    Returns:
+      A ``CellSolution`` with every field carrying the leading cell dim:
+      (C, I) for per-client fields, (C,) for deadline / cost / flags.
     """
     fn = partial(solve_cell, bandwidth_hz=bandwidth_hz, noise_psd=noise_psd,
                  waterfall_m0=waterfall_m0, model_bits=model_bits,

@@ -80,7 +80,7 @@ def make_population(key: jax.Array, topo: FleetTopology,
     cpu = jax.random.uniform(k_cpu, topo.shape, minval=topo.cpu_hz_range[0],
                              maxval=topo.cpu_hz_range[1])
     samples = jax.random.randint(k_samp, topo.shape, topo.samples_range[0],
-                                 topo.samples_range[1] + 1).astype(jnp.float32)
+                                 topo.samples_range[1] + 1).astype(jnp.result_type(float))
     return ClientPopulation(
         dist_m=dist,
         pathloss=path_loss_linear(dist),
