@@ -1,4 +1,5 @@
-"""Fleet engine throughput: rounds/sec vs client count, sync vs async.
+"""Fleet engine throughput: rounds/sec vs client count, sync vs async,
+reference vs fused client-gradient kernels.
 
 Measures the scan-compiled round loop end-to-end (channel sample ->
 closed-form solver -> masked-gradient FedSGD -> packet-error aggregation
@@ -7,25 +8,37 @@ from the paper's 5 UEs up to 100k clients.  The solver runs *inside* the
 scan — zero per-round host work — so rounds/sec is the compiled-program
 number the ROADMAP north star cares about.
 
+``--kernel`` picks the client-gradient hot path (``FleetConfig.kernel``):
+``reference`` is the PR-2 vmap + AD batch, ``fused`` streams client tiles
+through ``kernels/fleet_fused.py``; ``both`` runs the two arms on
+identical configs/draws and prints the speedup.
+
 ``--compare`` benchmarks the synchronous barrier against FedBuff-style
 buffered aggregation on a straggler-heavy fleet: same client count, same
 seed, reporting both engine throughput (rounds/s or events/s of host time)
 and *simulated* wall-clock to a target training loss — the async path's
 whole point is buying back the straggler tail on that second axis.
 
+``--json`` additionally writes ``BENCH_fleet.json`` — the machine-readable
+perf trajectory (every arm's rounds/sec plus fused-over-reference
+speedups), so regressions are diffable from this PR onward.
+
   PYTHONPATH=src python -m benchmarks.fleet_bench            # default sweep
-  PYTHONPATH=src python -m benchmarks.fleet_bench --clients 5,1000,10000
+  PYTHONPATH=src python -m benchmarks.fleet_bench --clients 5,1000,100000 \
+      --kernel both --json
   PYTHONPATH=src python -m benchmarks.fleet_bench --compare  # sync vs async
-  PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # CI-sized
+  PYTHONPATH=src python -m benchmarks.fleet_bench --smoke --json   # CI-sized
 
 Writes ``fleet_bench.csv`` (sweep) / ``fleet_async_bench.csv`` (compare)
-via the shared benchmark plumbing.
+via the shared benchmark plumbing, and ``BENCH_fleet.json`` with --json.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import math
+import os
 import time
 
 import jax
@@ -34,6 +47,8 @@ import numpy as np
 from benchmarks import common
 from repro.fleet import AsyncConfig, FleetConfig, FleetTopology
 from repro.fleet.engine import build_simulation, time_to_loss
+
+JSON_NAME = "BENCH_fleet.json"
 
 
 def _fleet_shape(clients: int) -> tuple[int, int]:
@@ -47,30 +62,42 @@ def _fleet_shape(clients: int) -> tuple[int, int]:
     return clients // per_cell, per_cell
 
 
-def bench_one(clients: int, rounds: int, seed: int = 0) -> dict:
-    cells, per_cell = _fleet_shape(clients)
-    cfg = FleetConfig(
-        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
-        rounds=rounds, seed=seed,
-        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
-
-    sim = build_simulation(cfg)
+def _time_simulation(sim, repeats: int) -> tuple[float, float, tuple]:
+    """(compile seconds, best-of-``repeats`` warm seconds, last scan
+    output — for ``finalize``)."""
     t0 = time.perf_counter()
     out = sim.simulate(sim.params, sim.round_keys)   # compile + run
     jax.block_until_ready(out)
     cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = sim.simulate(sim.params, sim.round_keys)   # compiled executable
-    jax.block_until_ready(out)
-    warm = time.perf_counter() - t0
+    warm = math.inf
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        out = sim.simulate(sim.params, sim.round_keys)
+        jax.block_until_ready(out)
+        warm = min(warm, time.perf_counter() - t0)
+    return cold - warm, warm, out
+
+
+def bench_one(clients: int, rounds: int, kernel: str = "reference",
+              seed: int = 0, repeats: int = 2) -> dict:
+    cells, per_cell = _fleet_shape(clients)
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
+        rounds=rounds, seed=seed, kernel=kernel,
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+
+    sim = build_simulation(cfg)
+    compile_s, warm, out = _time_simulation(sim, repeats)
     res = sim.finalize(*out)
 
     assert np.all(np.isfinite(res.losses)), "non-finite losses at scale"
     return {
+        "mode": "sync",
+        "kernel": kernel,
         "clients": clients,
         "cells": cells,
         "rounds": rounds,
-        "compile_s": cold - warm,
+        "compile_s": compile_s,
         "run_s": warm,
         "rounds_per_s": rounds / warm,
         "client_rounds_per_s": clients * rounds / warm,
@@ -79,8 +106,9 @@ def bench_one(clients: int, rounds: int, seed: int = 0) -> dict:
 
 
 def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
-               buffer_frac: float = 0.25, target_loss: float = 1.8,
-               deadline_s: float = 8.0) -> dict:
+               kernel: str = "reference", buffer_frac: float = 0.25,
+               target_loss: float = 1.8, deadline_s: float = 8.0,
+               repeats: int = 2) -> dict:
     """Time one engine mode on a straggler-heavy fleet (wide CPU + distance
     spread, so the sync barrier pays a long latency tail every round).
 
@@ -100,27 +128,21 @@ def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
                                cpu_hz_range=(2e8, 8e9), max_dist_m=1500.0),
         schedule=ScheduleConfig(round_deadline_s=deadline_s),
         async_config=AsyncConfig(buffer_size=buffer, max_staleness=20),
-        rounds=rounds, seed=seed,
+        rounds=rounds, seed=seed, kernel=kernel,
         cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
 
     sim = build_simulation(cfg, mode=mode)
-    t0 = time.perf_counter()
-    out = sim.simulate(sim.params, sim.round_keys)   # compile + run
-    jax.block_until_ready(out)
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = sim.simulate(sim.params, sim.round_keys)   # compiled executable
-    jax.block_until_ready(out)
-    warm = time.perf_counter() - t0
+    compile_s, warm, out = _time_simulation(sim, repeats)
     res = sim.finalize(*out)
 
     assert np.all(np.isfinite(res.losses)), f"non-finite losses ({mode})"
     return {
         "mode": mode,
+        "kernel": kernel,
         "clients": clients,
         "rounds": rounds,
         "buffer": buffer,
-        "compile_s": cold - warm,
+        "compile_s": compile_s,
         "run_s": warm,
         "rounds_per_s": rounds / warm,
         "sim_wall_s": float(res.wall_clock[-1]),
@@ -130,32 +152,72 @@ def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
     }
 
 
-def run_compare(counts: list[int], rounds: int, target_loss: float) -> None:
+def _speedups(records: list[dict]) -> list[dict]:
+    """fused-over-reference rounds/sec ratio per (mode, clients)."""
+    by_key = {}
+    for r in records:
+        by_key.setdefault((r["mode"], r["clients"]), {})[r["kernel"]] = r
+    out = []
+    for (mode, clients), arms in sorted(by_key.items()):
+        if "reference" in arms and "fused" in arms:
+            out.append({
+                "mode": mode,
+                "clients": clients,
+                "speedup": arms["fused"]["rounds_per_s"]
+                / arms["reference"]["rounds_per_s"],
+            })
+    return out
+
+
+def write_json(records: list[dict], path: str | None = None) -> str:
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    path = path or os.path.join(common.RESULTS_DIR, JSON_NAME)
+    doc = {
+        "schema": "fleet_bench/v1",
+        "created_unix": time.time(),
+        "backend": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "results": records,
+        "speedups": _speedups(records),
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def run_compare(counts: list[int], rounds: int, target_loss: float,
+                kernels: list[str], repeats: int) -> list[dict]:
     """Sync-vs-async table: host throughput + simulated time-to-target."""
-    header = ["mode", "clients", "rounds", "buffer", "compile_s", "run_s",
-              "rounds_per_s", "sim_wall_s", "sim_s_to_loss", "final_loss",
-              "mean_staleness"]
-    rows = []
+    header = ["mode", "kernel", "clients", "rounds", "buffer", "compile_s",
+              "run_s", "rounds_per_s", "sim_wall_s", "sim_s_to_loss",
+              "final_loss", "mean_staleness"]
+    rows, records = [], []
     for clients in counts:
-        pair = {}
-        for mode in ("sync", "async"):
-            r = bench_mode(clients, rounds, mode, target_loss=target_loss)
-            pair[mode] = r
-            rows.append([r[h] for h in header])
-            print(f"{mode:>5s} clients={clients:>7d} "
-                  f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
-                  f"{r['rounds_per_s']:8.2f} rounds/s "
-                  f"sim_wall={r['sim_wall_s']:8.1f}s "
-                  f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s "
-                  f"stale={r['mean_staleness']:4.1f}")
-        s, a = pair["sync"]["sim_s_to_loss"], pair["async"]["sim_s_to_loss"]
-        if np.isfinite(s) and np.isfinite(a) and a > 0 and s > 0:
-            word = "sooner" if s >= a else "LATER"
-            ratio = s / a if s >= a else a / s
-            print(f"      clients={clients:>7d} async reaches "
-                  f"loss<{target_loss} {ratio:.2f}x {word} (simulated)")
+        for kernel in kernels:
+            pair = {}
+            for mode in ("sync", "async"):
+                r = bench_mode(clients, rounds, mode, kernel=kernel,
+                               target_loss=target_loss, repeats=repeats)
+                pair[mode] = r
+                records.append(r)
+                rows.append([r[h] for h in header])
+                print(f"{mode:>5s} {kernel:>9s} clients={clients:>7d} "
+                      f"compile={r['compile_s']:6.1f}s "
+                      f"run={r['run_s']:7.2f}s "
+                      f"{r['rounds_per_s']:8.2f} rounds/s "
+                      f"sim_wall={r['sim_wall_s']:8.1f}s "
+                      f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s "
+                      f"stale={r['mean_staleness']:4.1f}")
+            s = pair["sync"]["sim_s_to_loss"]
+            a = pair["async"]["sim_s_to_loss"]
+            if np.isfinite(s) and np.isfinite(a) and a > 0 and s > 0:
+                word = "sooner" if s >= a else "LATER"
+                ratio = s / a if s >= a else a / s
+                print(f"      clients={clients:>7d} async reaches "
+                      f"loss<{target_loss} {ratio:.2f}x {word} (simulated)")
     path = common.write_csv("fleet_async_bench.csv", header, rows)
     print(f"wrote {path}")
+    return records
 
 
 def main() -> None:
@@ -163,13 +225,28 @@ def main() -> None:
     ap.add_argument("--clients", default="5,100,1000,10000",
                     help="comma-separated client counts (try up to 100000)")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--kernel", default=None,
+                    choices=["reference", "fused", "both"],
+                    help="client-gradient hot path (default: reference; "
+                         "--json defaults to both)")
     ap.add_argument("--compare", action="store_true",
                     help="sync vs async buffered aggregation comparison")
     ap.add_argument("--target-loss", type=float, default=1.8,
                     help="--compare: simulated-time-to-loss threshold")
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help=f"write {JSON_NAME} (default under "
+                         "benchmarks/results/)")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="warm runs per point; best is reported")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: 2 tiny fleets, 3 rounds")
     args = ap.parse_args()
+
+    emit_json = args.json is not None
+    json_path = args.json or None
+    kernel = args.kernel or ("both" if emit_json else "reference")
+    kernels = ["reference", "fused"] if kernel == "both" else [kernel]
 
     if args.compare:
         if args.smoke:
@@ -178,7 +255,10 @@ def main() -> None:
             counts = ([10000] if args.clients == "5,100,1000,10000"
                       else [int(c) for c in args.clients.split(",")])
             rounds = 50 if args.rounds == 20 else args.rounds
-        run_compare(counts, rounds, args.target_loss)
+        records = run_compare(counts, rounds, args.target_loss, kernels,
+                              args.repeats)
+        if emit_json:
+            print(f"wrote {write_json(records, json_path)}")
         return
 
     if args.smoke:
@@ -187,18 +267,35 @@ def main() -> None:
         counts = [int(c) for c in args.clients.split(",")]
         rounds = args.rounds
 
-    header = ["clients", "cells", "rounds", "compile_s", "run_s",
-              "rounds_per_s", "client_rounds_per_s", "final_loss"]
-    rows = []
+    header = ["mode", "kernel", "clients", "cells", "rounds", "compile_s",
+              "run_s", "rounds_per_s", "client_rounds_per_s", "final_loss"]
+    rows, records = [], []
     for clients in counts:
-        r = bench_one(clients, rounds)
-        rows.append([r[h] for h in header])
-        print(f"clients={clients:>7d} cells={r['cells']:>4d} "
-              f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
-              f"{r['rounds_per_s']:8.2f} rounds/s "
-              f"{r['client_rounds_per_s']:12.0f} client-rounds/s")
+        for k in kernels:
+            r = bench_one(clients, rounds, kernel=k, repeats=args.repeats)
+            records.append(r)
+            rows.append([r[h] for h in header])
+            print(f"{k:>9s} clients={clients:>7d} cells={r['cells']:>4d} "
+                  f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
+                  f"{r['rounds_per_s']:8.2f} rounds/s "
+                  f"{r['client_rounds_per_s']:12.0f} client-rounds/s")
+    if emit_json:
+        # one async point per kernel so the artifact covers both modes
+        async_clients = 64 if args.smoke else min(10000, max(counts))
+        async_rounds = 5 if args.smoke else rounds
+        for k in kernels:
+            r = bench_mode(async_clients, async_rounds, "async", kernel=k,
+                           repeats=args.repeats)
+            records.append(r)
+            print(f"{k:>9s} async clients={async_clients:>7d} "
+                  f"run={r['run_s']:7.2f}s {r['rounds_per_s']:8.2f} events/s")
+    for s in _speedups(records):
+        print(f"  fused/reference @ {s['clients']:>7d} clients "
+              f"({s['mode']}): {s['speedup']:.2f}x")
     path = common.write_csv("fleet_bench.csv", header, rows)
     print(f"wrote {path}")
+    if emit_json:
+        print(f"wrote {write_json(records, json_path)}")
 
 
 if __name__ == "__main__":

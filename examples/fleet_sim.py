@@ -56,6 +56,12 @@ def main() -> None:
                     help="async: discount strength alpha")
     ap.add_argument("--cell-chunk", type=int, default=0,
                     help="cells per gradient-accumulation chunk (memory cap)")
+    ap.add_argument("--kernel", default="reference",
+                    choices=["reference", "fused", "fused_xla",
+                             "fused_pallas"],
+                    help="client-gradient hot path: vmap+AD reference or "
+                         "the block-sparse fused kernel "
+                         "(kernels/fleet_fused.py)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", action="store_true",
                     help="shard the cell axis over the host mesh")
@@ -78,7 +84,7 @@ def main() -> None:
                                  staleness_discount=args.staleness_discount,
                                  staleness_alpha=args.staleness_alpha),
         weight=args.weight, rounds=args.rounds, seed=args.seed,
-        cell_chunk=args.cell_chunk)
+        cell_chunk=args.cell_chunk, kernel=args.kernel)
 
     mesh = None
     if args.mesh:

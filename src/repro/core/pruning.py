@@ -21,7 +21,7 @@ norm scales) are never pruned (negligible bytes, disproportionate damage).
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,11 @@ __all__ = [
     "apply_masks",
     "achieved_rate",
     "ones_masks",
+    "BlockNormState",
+    "block_norm_state",
+    "block_thresholds",
+    "block_keep",
+    "masks_from_state",
 ]
 
 PyTree = Any
@@ -104,6 +109,116 @@ def _tile_element_counts(m: int, n: int, lead: int, block: int) -> jnp.ndarray:
     return jnp.broadcast_to(counts, (lead,) + counts.shape)
 
 
+def _leaf_tile_norms(leaf: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Tile L2 norms over the *last two* dims; leading dims are batch-wise."""
+    lead = leaf.shape[:-2]
+    w2 = leaf.reshape((-1,) + leaf.shape[-2:])
+    norms = jax.vmap(functools.partial(block_l2_norms, block=block))(w2)
+    return norms.reshape(lead + norms.shape[1:])
+
+
+def _leaf_tile_counts(leaf: jnp.ndarray, block: int) -> jnp.ndarray:
+    m, n = leaf.shape[-2], leaf.shape[-1]
+    lead = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
+        if leaf.ndim > 2 else 1
+    return _tile_element_counts(m, n, lead, block)
+
+
+class BlockNormState(NamedTuple):
+    """Once-per-round ranking statistics for one prunable leaf.
+
+    The full sort happens *here*, once; per-client masks then cost one
+    ``searchsorted`` each (see ``block_thresholds``), which is what makes
+    per-client per-round block pruning affordable at fleet scale.
+    """
+
+    norms: jnp.ndarray         # lead + (Tk, Tn) tile squared-L2 norms
+    sorted_norms: jnp.ndarray  # (T,) the same norms, ascending
+    cum_frac: jnp.ndarray      # (T,) cumulative element mass of sorted tiles
+
+
+def block_norm_state(params: PyTree, block: int = DEFAULT_BLOCK
+                     ) -> list[Optional[BlockNormState]]:
+    """Per-leaf ranking state, aligned with ``tree_flatten(params)`` order
+    (``None`` for unprunable leaves).  Equivalent to the sort inside
+    ``block_masks(scope="leaf")`` but factored out so a round computes it
+    once and reuses it for every client's threshold."""
+    leaves, _, flags = _flatten_prunable(params)
+    out: list[Optional[BlockNormState]] = []
+    for leaf, f in zip(leaves, flags):
+        if not f:
+            out.append(None)
+            continue
+        norms = _leaf_tile_norms(leaf, block)
+        counts = _leaf_tile_counts(leaf, block).reshape(-1).astype(jnp.float32)
+        flat = norms.reshape(-1)
+        order = jnp.argsort(flat)
+        cum = jnp.cumsum(counts[order])
+        out.append(BlockNormState(norms=norms, sorted_norms=flat[order],
+                                  cum_frac=cum / cum[-1]))
+    return out
+
+
+def block_thresholds(state: BlockNormState, rate: jnp.ndarray) -> jnp.ndarray:
+    """Smallest kept norm at pruning rate ``rate`` (scalar or batched).
+
+    Tiles whose cumulative element mass is <= rate*total are dropped
+    (side="right": an exact tile boundary drops the boundary tile; floor
+    semantics otherwise) — identical to ``block_masks``'s quantile.
+    """
+    rate = jnp.clip(jnp.asarray(rate), 0.0, 1.0)
+    idx = jnp.searchsorted(state.cum_frac, rate, side="right")
+    return state.sorted_norms[jnp.clip(idx, 0, state.sorted_norms.size - 1)]
+
+
+def block_keep(state: list[Optional[BlockNormState]], rates: jnp.ndarray
+               ) -> list[Optional[jnp.ndarray]]:
+    """Per-leaf tile-keep indicators for a *batch* of pruning rates.
+
+    Returns, for each prunable leaf, a float array of shape
+    ``rates.shape + norms.shape`` with 1.0 where the tile survives client
+    c's threshold (rate <= 0 keeps everything, as in ``block_masks``).
+    """
+    rates = jnp.asarray(rates)
+    out: list[Optional[jnp.ndarray]] = []
+    for st in state:
+        if st is None:
+            out.append(None)
+            continue
+        thresh = block_thresholds(st, rates)          # rates.shape
+        ext = thresh.reshape(thresh.shape + (1,) * st.norms.ndim)
+        keep = (st.norms >= ext) | (rates.reshape(ext.shape) <= 0.0)
+        out.append(keep.astype(jnp.float32))
+    return out
+
+
+def _expand_tiles(keep: jnp.ndarray, shape: tuple, block: int) -> jnp.ndarray:
+    """Tile-level keep -> element-level boolean mask of ``shape``."""
+    m, n = shape[-2], shape[-1]
+    keep = jnp.repeat(jnp.repeat(keep, block, axis=-2), block, axis=-1)
+    return keep[..., :m, :n]
+
+
+def masks_from_state(params: PyTree, state: list[Optional[BlockNormState]],
+                     rate, block: int = DEFAULT_BLOCK) -> PyTree:
+    """Element-level boolean masks for one scalar rate from a precomputed
+    ``block_norm_state`` — equals ``block_masks(params, rate, block,
+    scope="leaf")`` by construction (``block_masks`` is implemented on
+    top of this)."""
+    rate = jnp.clip(jnp.asarray(rate), 0.0, 1.0)
+    leaves, treedef, flags = _flatten_prunable(params)
+    keep_all = rate <= 0.0
+    masked = []
+    for leaf, f, st in zip(leaves, flags, state):
+        if not f:
+            masked.append(jnp.ones(leaf.shape, bool))
+            continue
+        thresh = block_thresholds(st, rate)
+        keep = (st.norms >= thresh) | keep_all
+        masked.append(_expand_tiles(keep, leaf.shape, block))
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
 def block_masks(params: PyTree, prune_rate: float,
                 block: int = DEFAULT_BLOCK, scope: str = "leaf") -> PyTree:
     """TPU block-structured magnitude pruning.
@@ -125,61 +240,32 @@ def block_masks(params: PyTree, prune_rate: float,
     prune_rate = float(np.clip(prune_rate, 0.0, 1.0)) if not isinstance(
         prune_rate, jnp.ndarray) else jnp.clip(prune_rate, 0.0, 1.0)
     rate = jnp.asarray(prune_rate)
-    keep_all = rate <= 0.0
-    leaves, treedef, flags = _flatten_prunable(params)
 
-    def tile_norms(leaf: jnp.ndarray) -> jnp.ndarray:
-        lead = leaf.shape[:-2]
-        w2 = leaf.reshape((-1,) + leaf.shape[-2:])
-        norms = jax.vmap(functools.partial(block_l2_norms, block=block))(w2)
-        return norms.reshape(lead + norms.shape[1:])
-
-    def weighted_thresh(norms_cat: jnp.ndarray, counts_cat: jnp.ndarray):
-        """Smallest kept norm: tiles whose cumulative element mass is
-        <= rate*total are dropped (side="right": an exact tile boundary
-        drops the boundary tile; floor semantics otherwise)."""
-        order = jnp.argsort(norms_cat)
-        sorted_norms = norms_cat[order]
-        cum = jnp.cumsum(counts_cat[order])
-        idx = jnp.searchsorted(cum / cum[-1], rate, side="right")
-        return sorted_norms[jnp.clip(idx, 0, sorted_norms.size - 1)]
-
-    def leaf_counts(leaf: jnp.ndarray) -> jnp.ndarray:
-        m, n = leaf.shape[-2], leaf.shape[-1]
-        lead = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
-            if leaf.ndim > 2 else 1
-        return _tile_element_counts(m, n, lead, block)
-
-    all_norms = [tile_norms(l) if f else None for l, f in zip(leaves, flags)]
-
-    if scope == "global":
-        norms_cat = jnp.concatenate(
-            [n.reshape(-1) for n, f in zip(all_norms, flags) if f])
-        counts_cat = jnp.concatenate(
-            [leaf_counts(l).reshape(-1) for l, f in zip(leaves, flags) if f]
-        ).astype(jnp.float32)
-        g_thresh = weighted_thresh(norms_cat, counts_cat)
-        threshes = [g_thresh if f else None for f in flags]
-    elif scope == "leaf":
-        threshes = [
-            weighted_thresh(n.reshape(-1),
-                            leaf_counts(l).reshape(-1).astype(jnp.float32))
-            if f else None
-            for l, f, n in zip(leaves, flags, all_norms)
-        ]
-    else:
+    if scope == "leaf":
+        return masks_from_state(params, block_norm_state(params, block),
+                                rate, block)
+    if scope != "global":
         raise ValueError(f"scope must be 'leaf' or 'global', got {scope!r}")
 
-    def expand(leaf: jnp.ndarray, norms: jnp.ndarray,
-               thresh: jnp.ndarray) -> jnp.ndarray:
-        keep = (norms >= thresh) | keep_all
-        m, n = leaf.shape[-2], leaf.shape[-1]
-        keep = jnp.repeat(jnp.repeat(keep, block, axis=-2), block, axis=-1)
-        return keep[..., :m, :n]
+    keep_all = rate <= 0.0
+    leaves, treedef, flags = _flatten_prunable(params)
+    all_norms = [_leaf_tile_norms(l, block) if f else None
+                 for l, f in zip(leaves, flags)]
+    norms_cat = jnp.concatenate(
+        [n.reshape(-1) for n, f in zip(all_norms, flags) if f])
+    counts_cat = jnp.concatenate(
+        [_leaf_tile_counts(l, block).reshape(-1)
+         for l, f in zip(leaves, flags) if f]).astype(jnp.float32)
+    order = jnp.argsort(norms_cat)
+    cum = jnp.cumsum(counts_cat[order])
+    g_state = BlockNormState(norms=norms_cat, sorted_norms=norms_cat[order],
+                             cum_frac=cum / cum[-1])
+    g_thresh = block_thresholds(g_state, rate)
 
     masked = [
-        expand(l, n, t) if f else jnp.ones(l.shape, bool)
-        for l, f, n, t in zip(leaves, flags, all_norms, threshes)
+        _expand_tiles((n >= g_thresh) | keep_all, l.shape, block)
+        if f else jnp.ones(l.shape, bool)
+        for l, f, n in zip(leaves, flags, all_norms)
     ]
     return jax.tree_util.tree_unflatten(treedef, masked)
 

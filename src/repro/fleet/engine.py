@@ -23,14 +23,20 @@ Two aggregation modes share the per-round control path (``_round_control``):
   the round barrier and async equals sync (equivalence-tested).
 
 Data/model: a deterministic synthetic classification task (per-class
-Gaussian templates).  Each client's local batch regenerates on the fly
-every round from a *fixed* per-client fold of the data key — identical
-samples each round (the FL fixed-local-dataset setting) without holding a
-(clients x batch x dim) tensor resident; memory is bounded by the optional
-cell-chunked gradient accumulation (sync) or by ``buffer_size`` (async).
-Local batches share one static size ``local_batch`` (shape-uniform for
-vmap); the heterogeneous K_i act through aggregation weights and the
-latency model, as in the paper's Eqs. (2)-(5).
+Gaussian templates).  Each client's local batch derives from a *fixed*
+per-client fold of the data key — identical samples each round (the FL
+fixed-local-dataset setting).  Below ``cache_data``'s memory limit the
+batches are materialized once at build time; above it they regenerate on
+the fly inside the scan, so memory stays bounded by the cell-chunked
+gradient accumulation (sync) or by ``buffer_size`` (async).  Local
+batches share one static size ``local_batch`` (shape-uniform for vmap);
+the heterogeneous K_i act through aggregation weights and the latency
+model, as in the paper's Eqs. (2)-(5).
+
+Client-gradient hot path: ``FleetConfig.kernel`` selects the PR-2
+vmap + AD "reference" batch or the block-sparse "fused" streaming kernel
+(``kernels/fleet_fused.py``) whose compute scales with (1 - rho) —
+see docs/fleet.md §"Client-gradient kernels".
 
 Sharding: pass a mesh from ``launch.mesh`` and the cell axis of every
 population/fading tensor is placed on the mesh's "data" axis
@@ -54,6 +60,7 @@ from repro.core.convergence import ConvergenceBound, SmoothnessParams
 from repro.fleet import scheduler as SCHED
 from repro.fleet import solver as SOLVER
 from repro.fleet import topology as TOPO
+from repro.kernels import fleet_fused as FUSED
 from repro.models import mlp
 
 PyTree = Any
@@ -91,6 +98,27 @@ class FleetConfig:
     test_samples: int = 512
     # gradient accumulation: cells per scan chunk (0 = whole fleet at once)
     cell_chunk: int = 0
+    # client-gradient hot path: "reference" is the vmap + AD batch
+    # (PR-2 behaviour); "fused" streams tiles of clients through the
+    # block-sparse fused kernel (kernels/fleet_fused.py) and never
+    # materializes the (clients, params) gradient batch.  "fused_xla" /
+    # "fused_pallas" pin the implementation (fused = Pallas on TPU, XLA
+    # elsewhere; Pallas runs interpret off-TPU).
+    kernel: str = "reference"
+    # reference-path mask rule: "magnitude" (paper-style unstructured,
+    # PR-2 behaviour) or "block" (block-norm threshold masks — what the
+    # fused path always uses; set it on the reference path to
+    # equivalence-test fused trajectories)
+    mask_kind: str = "magnitude"
+    # block edge for block-structured pruning (small: the fleet MLP's
+    # matrices are far below one 128x128 MXU pass)
+    prune_block: int = 8
+    # Materialize every client's (fixed) local batch once at build time
+    # instead of re-deriving it from the PRNG inside every scan step —
+    # identical draws, amortized threefry/erfinv cost.  None = auto: cache
+    # unless the (clients, batch, dim) tensor would exceed ~512 MB (the
+    # 1M-client regime keeps the streaming regeneration).
+    cache_data: Optional[bool] = None
 
 
 @dataclasses.dataclass
@@ -135,11 +163,52 @@ def _client_batch(data_key: jax.Array, client_idx: jnp.ndarray,
     return x, y
 
 
+_CACHE_LIMIT_BYTES = 512 << 20
+
+
+def _make_batch_fn(cfg: FleetConfig, data_key: jax.Array,
+                   templates: jnp.ndarray):
+    """flat client indices -> (x, y) local batches.
+
+    When the whole fleet's data fits ``_CACHE_LIMIT_BYTES`` (or
+    ``cfg.cache_data`` forces it), every client's fixed batch is derived
+    from the PRNG *once* here and scan steps just gather rows — the draws
+    are bit-identical to the streaming path, which re-runs
+    ``_client_batch`` (threefry + erfinv per round) inside the scan and
+    stays the default above the memory limit.
+    """
+    n = cfg.topology.num_clients
+
+    def generate(flat_idx):
+        return jax.vmap(lambda ci: _client_batch(
+            data_key, ci, templates, cfg.local_batch, cfg.data_noise)
+        )(flat_idx)
+
+    cache = cfg.cache_data
+    if cache is None:
+        nbytes = n * cfg.local_batch * (cfg.feature_dim + 1) * 4
+        cache = nbytes <= _CACHE_LIMIT_BYTES
+    if not cache:
+        return generate, None
+    x_all, y_all = generate(jnp.arange(n, dtype=jnp.int32))
+
+    def gather(flat_idx):
+        return x_all[flat_idx], y_all[flat_idx]
+
+    return gather, (x_all, y_all)
+
+
 def _client_grad(params: PyTree, rho_i: jnp.ndarray, x: jnp.ndarray,
-                 y: jnp.ndarray) -> tuple[jnp.ndarray, PyTree]:
-    """Masked local gradient: rho-level magnitude masks, grad at the pruned
-    point, gradient re-masked (exactly the 5-client path's client_grad)."""
-    masks = pruning.magnitude_masks(params, rho_i)
+                 y: jnp.ndarray, cfg: FleetConfig
+                 ) -> tuple[jnp.ndarray, PyTree]:
+    """Masked local gradient: rho-level masks, grad at the pruned point,
+    gradient re-masked (exactly the 5-client path's client_grad).  The
+    mask rule follows ``cfg.mask_kind``: unstructured magnitude pruning
+    (paper-style) or block-norm threshold masks (the fused kernel's)."""
+    if cfg.mask_kind == "block":
+        masks = pruning.block_masks(params, rho_i, block=cfg.prune_block)
+    else:
+        masks = pruning.magnitude_masks(params, rho_i)
     pruned = pruning.apply_masks(params, masks)
 
     def loss_fn(p):
@@ -149,49 +218,108 @@ def _client_grad(params: PyTree, rho_i: jnp.ndarray, x: jnp.ndarray,
     return loss, pruning.apply_masks(g, masks)
 
 
+def _kernel_impl(cfg: FleetConfig) -> str:
+    return {"fused": "auto", "fused_xla": "xla",
+            "fused_pallas": "pallas"}[cfg.kernel]
+
+
+def _chunk_accumulate(step, arrays: tuple, chunk: int):
+    """Sum ``step(*slice)`` over consecutive axis-0 slices of ``arrays``.
+
+    Full ``chunk``-sized slices run under one ``lax.scan``; a ragged
+    remainder runs as one exact-sized call.  Unlike zero-padding the last
+    chunk, no phantom rows ever reach the batch builder or the backward
+    pass — padding previously cost up to ``chunk - 1`` cells of dead
+    gradient work per round.
+    """
+    c = arrays[0].shape[0]
+    n_full = c // chunk
+    rem = c - n_full * chunk
+    out = None
+    if n_full:
+        stacked = tuple(
+            a[:n_full * chunk].reshape((n_full, chunk) + a.shape[1:])
+            for a in arrays)
+        shapes = jax.eval_shape(step, *(a[0] for a in stacked))
+        init = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+        def body(acc, sl):
+            return jax.tree.map(jnp.add, acc, step(*sl)), None
+
+        out, _ = jax.lax.scan(body, init, stacked)
+    if rem:
+        tail = step(*(a[n_full * chunk:] for a in arrays))
+        out = tail if out is None else jax.tree.map(jnp.add, out, tail)
+    return out
+
+
 def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
-                 sched_w: jnp.ndarray, data_key: jax.Array,
-                 templates: jnp.ndarray, cfg: FleetConfig):
+                 sched_w: jnp.ndarray, batch_fn, cfg: FleetConfig,
+                 data=None):
     """Weighted-sum gradients over the fleet, cell-chunked.
 
     Returns (grad_wsum pytree, sum agg_w, mean scheduled loss).  agg_w is
     K_i * C_i (Eq. 5 numerator weight, zero for lost/unscheduled clients);
     sched_w weights the loss metric (scheduled clients).
+
+    ``cfg.kernel`` picks the hot path: "reference" vmaps per-client AD
+    and reduces the (clients, params) gradient batch; "fused*" ranks the
+    round's block norms once (``layer_norm_states``) and streams client
+    tiles through ``kernels.fleet_fused`` so only the accumulated sum is
+    ever materialized.
+
+    ``data`` is the optional cached (x_all, y_all) from ``_make_batch_fn``
+    — when present, batches ride the chunk scan as contiguous slices
+    (a general gather over a 100 MB table thrashes caches at 100k+
+    clients); otherwise ``batch_fn`` regenerates them per chunk.
     """
     c, i = rho.shape
     chunk = cfg.cell_chunk if 0 < cfg.cell_chunk < c else c
-    pad = (-c) % chunk
-    if pad:
-        zeros = lambda a: jnp.concatenate(
-            [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
-        rho, agg_w, sched_w = zeros(rho), zeros(agg_w), zeros(sched_w)
-    idx = jnp.arange(rho.shape[0] * i, dtype=jnp.int32).reshape(rho.shape)
+    idx = jnp.arange(c * i, dtype=jnp.int32).reshape(rho.shape)
 
-    def one(args):
-        ridx, rrho = args
-        x, y = _client_batch(data_key, ridx, templates, cfg.local_batch,
-                             cfg.data_noise)
-        return _client_grad(params, rrho, x, y)
+    arrays = [idx, rho, agg_w, sched_w]
+    if data is not None:
+        x_all, y_all = data
+        arrays.append(x_all.reshape((c, i) + x_all.shape[1:]))
+        arrays.append(y_all.reshape((c, i) + y_all.shape[1:]))
 
-    def chunk_step(acc, chunk_args):
-        g_acc, w_acc, l_acc, lw_acc = acc
-        c_idx, c_rho, c_w, c_lw = chunk_args
-        losses, grads = jax.vmap(one)((c_idx.reshape(-1), c_rho.reshape(-1)))
-        w_flat = c_w.reshape(-1)
-        g_acc = jax.tree.map(
-            lambda a, g: a + jnp.einsum("c,c...->...", w_flat, g), g_acc, grads)
-        lw_flat = c_lw.reshape(-1)
-        return (g_acc, w_acc + jnp.sum(w_flat),
-                l_acc + jnp.sum(losses * lw_flat),
-                lw_acc + jnp.sum(lw_flat)), None
+    def batches(c_idx, extra):
+        if extra:
+            xc, yc = extra
+            return (xc.reshape((-1,) + xc.shape[2:]),
+                    yc.reshape((-1,) + yc.shape[2:]))
+        return batch_fn(c_idx.reshape(-1))
 
-    shape_c = (-1, chunk, i)
-    init = (jax.tree.map(jnp.zeros_like, params), jnp.zeros(()),
-            jnp.zeros(()), jnp.zeros(()))
-    (g_wsum, w_sum, loss_sum, loss_w), _ = jax.lax.scan(
-        chunk_step, init,
-        (idx.reshape(shape_c), rho.reshape(shape_c),
-         agg_w.reshape(shape_c), sched_w.reshape(shape_c)))
+    if cfg.kernel == "reference":
+        def step(c_idx, c_rho, c_w, c_lw, *extra):
+            x, y = batches(c_idx, extra)
+            losses, grads = jax.vmap(
+                lambda xi, yi, ri: _client_grad(params, ri, xi, yi, cfg)
+            )(x, y, c_rho.reshape(-1))
+            w_flat = c_w.reshape(-1)
+            lw_flat = c_lw.reshape(-1)
+            g = jax.tree.map(
+                lambda g: jnp.einsum("c,c...->...", w_flat, g), grads)
+            return (g, jnp.sum(w_flat), jnp.sum(losses * lw_flat),
+                    jnp.sum(lw_flat))
+    else:
+        # once per round: the full sort of every layer's tile norms —
+        # per-client masks below are one searchsorted each
+        states = FUSED.layer_norm_states(params, cfg.prune_block)
+
+        def step(c_idx, c_rho, c_w, c_lw, *extra):
+            x, y = batches(c_idx, extra)
+            keeps = FUSED.layer_keeps(states, c_rho.reshape(-1))
+            w_flat = c_w.reshape(-1)
+            g, losses = FUSED.fused_fleet_grads(
+                params, x, y, keeps, w_flat, cfg.prune_block,
+                impl=_kernel_impl(cfg))
+            lw_flat = c_lw.reshape(-1)
+            return (g, jnp.sum(w_flat), jnp.sum(losses * lw_flat),
+                    jnp.sum(lw_flat))
+
+    g_wsum, w_sum, loss_sum, loss_w = _chunk_accumulate(
+        step, tuple(arrays), chunk)
     mean_loss = loss_sum / jnp.maximum(loss_w, 1.0)
     return g_wsum, w_sum, mean_loss
 
@@ -275,6 +403,7 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     w = cfg.wireless
     b_hz = w.bandwidth_hz
     control = _make_control_fn(cfg, pop)
+    batch_fn, data = _make_batch_fn(cfg, data_key, templates)
 
     def round_fn(carry, rkey):
         params, per_sum, prune_sum = carry
@@ -288,7 +417,7 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         agg_w = pop.num_samples * arrivals                      # K_i C_i
 
         g_wsum, w_sum, mean_loss = _fleet_grads(
-            params, sol.prune, agg_w, mask, data_key, templates, cfg)
+            params, sol.prune, agg_w, mask, batch_fn, cfg, data=data)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
         new_params = jax.tree.map(
             lambda p, g: jnp.where(w_sum > 0, p - cfg.lr * g / denom, p),
@@ -396,6 +525,7 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     k_buf = acfg.cohort_buffer(n)
     hist_len = acfg.history_len
     control = _make_control_fn(cfg, pop)
+    batch_fn, _ = _make_batch_fn(cfg, data_key, templates)
     k_flat = pop.num_samples.reshape(-1)
 
     def gather(a: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
@@ -418,18 +548,49 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             max_staleness=acfg.max_staleness, xp=jnp)
 
         # -- 3. gradients at each client's *download* version (ring buffer)
-        def one(idx, rho_i, tau_i):
-            x, y = _client_batch(data_key, idx, templates, cfg.local_batch,
-                                 cfg.data_noise)
-            slot = (head - jnp.clip(tau_i, 0, hist_len - 1)) % hist_len
-            stale_params = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(a, slot, 0,
-                                                       keepdims=False), hist)
-            return _client_grad(stale_params, rho_i, x, y)
+        if cfg.kernel == "reference":
+            x, y = batch_fn(sel)
 
-        losses, grads = jax.vmap(one)(sel, gather(st.rho, sel), tau)
-        g_wsum = jax.tree.map(
-            lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
+            def one(xi, yi, rho_i, tau_i):
+                slot = (head - jnp.clip(tau_i, 0, hist_len - 1)) % hist_len
+                stale_params = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(
+                        a, slot, 0, keepdims=False), hist)
+                return _client_grad(stale_params, rho_i, xi, yi, cfg)
+
+            losses, grads = jax.vmap(one)(x, y, gather(st.rho, sel), tau)
+            g_wsum = jax.tree.map(
+                lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
+        else:
+            # Fused path: bucket the buffer by ring slot (= param version)
+            # so each populated slot streams through the fused kernel
+            # once; empty slots are skipped by lax.cond, so the common
+            # low-staleness event costs ~one kernel sweep, not hist_len.
+            x, y = batch_fn(sel)
+            rho_sel = gather(st.rho, sel)
+            slot_all = (head - jnp.clip(tau, 0, hist_len - 1)) % hist_len
+            g_wsum = jax.tree.map(
+                lambda a: jnp.zeros(a.shape[1:], a.dtype), hist)
+            losses = jnp.zeros(sel.shape, x.dtype)
+            for s in range(hist_len):
+                in_slot = (slot_all == s)
+
+                def compute(s=s, in_slot=in_slot):
+                    p_s = jax.tree.map(lambda a: a[s], hist)
+                    states = FUSED.layer_norm_states(p_s, cfg.prune_block)
+                    keeps = FUSED.layer_keeps(states, rho_sel)
+                    g, l = FUSED.fused_fleet_grads(
+                        p_s, x, y, keeps, w_merge * in_slot,
+                        cfg.prune_block, impl=_kernel_impl(cfg))
+                    return g, jnp.where(in_slot, l, 0.0).astype(x.dtype)
+
+                shapes = jax.eval_shape(compute)
+                g_s, l_s = jax.lax.cond(
+                    jnp.any(in_slot), compute,
+                    lambda: jax.tree.map(
+                        lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes))
+                g_wsum = jax.tree.map(jnp.add, g_wsum, g_s)
+                losses = losses + l_s
         w_sum = jnp.sum(w_merge)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
         params = jax.tree.map(
@@ -581,6 +742,13 @@ def build_simulation(cfg: FleetConfig, mesh=None,
     """
     if mode not in ("sync", "async"):
         raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+    if cfg.kernel not in ("reference", "fused", "fused_xla", "fused_pallas"):
+        raise ValueError(
+            "kernel must be 'reference', 'fused', 'fused_xla' or "
+            f"'fused_pallas', got {cfg.kernel!r}")
+    if cfg.mask_kind not in ("magnitude", "block"):
+        raise ValueError(
+            f"mask_kind must be 'magnitude' or 'block', got {cfg.mask_kind!r}")
     topo = cfg.topology
     root = jax.random.PRNGKey(cfg.seed)
     k_pop, k_tmpl, k_init, k_test, k_data, k_rounds = jax.random.split(root, 6)

@@ -29,23 +29,28 @@ def _pad_to(x: jnp.ndarray, mults: tuple[int, ...]) -> jnp.ndarray:
 
 def masked_matmul(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray,
                   block_m: int = 128, block_k: int = 128, block_n: int = 128,
+                  transpose_rhs: bool = False,
                   interpret: bool | None = None) -> jnp.ndarray:
     """y = x @ (w ⊙ blockmask); arbitrary (batched) x, auto padding.
 
     x: (..., K), w: (K, N), mask: (ceil(K/bk), ceil(N/bn)).
+    With ``transpose_rhs`` (the pruned layer's backward product):
+    x: (..., N) and y = x @ (w ⊙ blockmask)^T -> (..., K), reusing the
+    forward's mask layout.
     """
     interpret = _interpret_default() if interpret is None else interpret
     lead = x.shape[:-1]
-    kdim = x.shape[-1]
-    n = w.shape[1]
-    x2 = x.reshape(-1, kdim)
+    kdim, n = w.shape
+    x2 = x.reshape(-1, x.shape[-1])
     m = x2.shape[0]
     bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
-    x2 = _pad_to(x2, (bm, block_k))
+    x2 = _pad_to(x2, (bm, block_n if transpose_rhs else block_k))
     w2 = _pad_to(w, (block_k, block_n))
     y = _bsm.block_sparse_matmul(x2, w2, mask, bm, block_k, block_n,
+                                 transpose_rhs=transpose_rhs,
                                  interpret=interpret)
-    return y[:m, :n].reshape(*lead, n)
+    out_dim = kdim if transpose_rhs else n
+    return y[:m, :out_dim].reshape(*lead, out_dim)
 
 
 def tile_norms(w: jnp.ndarray, block_k: int = 128, block_n: int = 128,
@@ -93,6 +98,7 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 
 # re-export oracles for tests/benchmarks
 oracle_masked_matmul = ref.block_sparse_matmul
+oracle_masked_matmul_t = ref.block_sparse_matmul_t
 oracle_tile_norms = ref.block_norms
 oracle_flash_decode = ref.decode_attention
 oracle_flash_prefill = ref.prefill_attention

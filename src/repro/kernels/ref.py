@@ -17,6 +17,17 @@ def block_sparse_matmul(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray,
                    ).astype(x.dtype)
 
 
+def block_sparse_matmul_t(x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray,
+                          block_k: int, block_n: int) -> jnp.ndarray:
+    """y = x @ (w * expand(mask))^T — the pruned backward product.
+    x: (M, N), w: (K, N), mask: (K//bk, N//bn) 0/1; returns (M, K)."""
+    k, n = w.shape
+    em = jnp.repeat(jnp.repeat(mask, block_k, axis=0), block_n, axis=1)
+    em = em[:k, :n].astype(w.dtype)
+    return jnp.dot(x.astype(jnp.float32),
+                   (w * em).astype(jnp.float32).T).astype(x.dtype)
+
+
 def block_norms(w: jnp.ndarray, block_k: int, block_n: int) -> jnp.ndarray:
     """Squared L2 norm of every (block_k x block_n) tile. w: (K, N), K,N
     divisible by the block sizes."""

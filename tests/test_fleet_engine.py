@@ -130,6 +130,21 @@ def test_engine_cell_chunking_matches_unchunked():
     np.testing.assert_allclose(a.losses, b.losses, rtol=2e-5, atol=1e-6)
 
 
+def test_engine_ragged_chunk_matches_unchunked():
+    """Regression (ISSUE 3): a chunk size that does not divide the cell
+    count must give identical results — the remainder now runs as one
+    exact-sized call instead of zero-weight padded rows that still paid
+    for batch generation and a full backward pass."""
+    import jax
+    with jax.experimental.enable_x64():
+        a = run_fleet(tiny(rounds=3))                 # 3 cells, unchunked
+        b = run_fleet(tiny(rounds=3, cell_chunk=2))   # 1 full chunk + 1 rem
+    np.testing.assert_allclose(a.losses, b.losses, rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(a.accuracy, b.accuracy, rtol=1e-6, atol=1e-9)
+    for pa, pb in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)):
+        np.testing.assert_allclose(pa, pb, rtol=1e-6, atol=1e-9)
+
+
 def test_engine_partial_participation_and_deadline():
     sched = ScheduleConfig(participation="uniform", participants_per_cell=4,
                            straggler_prob=0.2, round_deadline_s=0.8)

@@ -134,3 +134,51 @@ def test_block_masks_jittable():
 
     a = float(f(jnp.asarray(0.5)))
     assert a == pytest.approx(0.5, abs=0.1)
+
+
+# ---------------------------------------------------------------------------
+# once-per-round threshold state (the fleet engine's fused-path mask source)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rate", [0.0, 0.25, 0.5, 0.75, 1.0])
+def test_masks_from_state_equals_block_masks(rate):
+    """The factored state path is the same function as block_masks."""
+    p = _params()
+    state = pruning.block_norm_state(p, block=32)
+    got = pruning.masks_from_state(p, state, rate, block=32)
+    want = pruning.block_masks(p, rate, block=32, scope="leaf")
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_block_thresholds_monotone_in_rate():
+    p = _params()
+    state = pruning.block_norm_state(p, block=32)
+    rates = jnp.linspace(0.0, 1.0, 11)
+    for st in state:
+        if st is None:
+            continue
+        t = np.asarray(pruning.block_thresholds(st, rates))
+        assert np.all(np.diff(t) >= 0.0)      # more pruning, higher bar
+
+
+def test_block_keep_batched_matches_scalar():
+    """One searchsorted per client == per-client block_masks, tile-wise."""
+    p = {"w": jax.random.normal(jax.random.PRNGKey(0), (96, 64))}
+    state = pruning.block_norm_state(p, block=32)
+    rates = jnp.asarray([0.0, 0.2, 0.5, 0.9])
+    keeps = pruning.block_keep(state, rates)[0]     # (4, 3, 2)
+    assert keeps.shape == (4, 3, 2)
+    for ci, r in enumerate(rates):
+        m = np.asarray(pruning.block_masks(p, r, block=32)["w"])
+        tiles = m.reshape(3, 32, 2, 32).sum(axis=(1, 3)) > 0
+        np.testing.assert_array_equal(np.asarray(keeps[ci]) > 0, tiles)
+
+
+def test_block_norm_state_skips_unprunable_leaves():
+    p = _params()
+    state = pruning.block_norm_state(p, block=32)
+    leaves, _, flags = pruning._flatten_prunable(p)
+    assert len(state) == len(leaves)
+    for st, f in zip(state, flags):
+        assert (st is None) == (not f)
