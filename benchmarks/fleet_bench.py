@@ -18,6 +18,10 @@ buffered aggregation on a straggler-heavy fleet: same client count, same
 seed, reporting both engine throughput (rounds/s or events/s of host time)
 and *simulated* wall-clock to a target training loss — the async path's
 whole point is buying back the straggler tail on that second axis.
+``--compare --buffer 0,1`` adds a FedAsync arm (buffer = 1: every arrival
+is its own server event) with the event count scaled so it merges about
+as many client updates as the default buffered arm — the ROADMAP's
+FedAsync latency study.
 
 ``--json`` additionally writes ``BENCH_fleet.json`` — the machine-readable
 perf trajectory (every arm's rounds/sec plus fused-over-reference
@@ -108,7 +112,8 @@ def bench_one(clients: int, rounds: int, kernel: str = "reference",
 def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
                kernel: str = "reference", buffer_frac: float = 0.25,
                target_loss: float = 1.8, deadline_s: float = 8.0,
-               repeats: int = 2) -> dict:
+               repeats: int = 2, buffer_size: int | None = None,
+               events: int | None = None) -> dict:
     """Time one engine mode on a straggler-heavy fleet (wide CPU + distance
     spread, so the sync barrier pays a long latency tail every round).
 
@@ -117,18 +122,27 @@ def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
     barrier forever, which is the failure mode — not a benchmark.  Sync
     drops late clients at the barrier; async never waits on them (staleness
     weighting retires their updates instead).
+
+    ``buffer_size`` overrides the frac-derived async buffer (1 = FedAsync:
+    every arrival is its own server event); ``events`` overrides the async
+    event count so small-buffer arms can merge a comparable number of
+    client updates.
     """
     from repro.fleet import ScheduleConfig
 
     cells, per_cell = _fleet_shape(clients)
     n = cells * per_cell
-    buffer = max(1, int(n * buffer_frac)) if mode == "async" else 0
+    if mode == "async":
+        buffer = buffer_size if buffer_size else max(1, int(n * buffer_frac))
+    else:
+        buffer = 0
+    steps = events if (mode == "async" and events) else rounds
     cfg = FleetConfig(
         topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell,
                                cpu_hz_range=(2e8, 8e9), max_dist_m=1500.0),
         schedule=ScheduleConfig(round_deadline_s=deadline_s),
         async_config=AsyncConfig(buffer_size=buffer, max_staleness=20),
-        rounds=rounds, seed=seed, kernel=kernel,
+        rounds=steps, seed=seed, kernel=kernel,
         cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
 
     sim = build_simulation(cfg, mode=mode)
@@ -140,11 +154,11 @@ def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
         "mode": mode,
         "kernel": kernel,
         "clients": clients,
-        "rounds": rounds,
+        "rounds": steps,
         "buffer": buffer,
         "compile_s": compile_s,
         "run_s": warm,
-        "rounds_per_s": rounds / warm,
+        "rounds_per_s": steps / warm,
         "sim_wall_s": float(res.wall_clock[-1]),
         "sim_s_to_loss": time_to_loss(res, target_loss),
         "final_loss": float(res.losses[-1]),
@@ -185,36 +199,68 @@ def write_json(records: list[dict], path: str | None = None) -> str:
     return path
 
 
+_MAX_COMPARE_EVENTS = 4000
+
+
 def run_compare(counts: list[int], rounds: int, target_loss: float,
-                kernels: list[str], repeats: int) -> list[dict]:
-    """Sync-vs-async table: host throughput + simulated time-to-target."""
+                kernels: list[str], repeats: int,
+                buffers: list[int] | None = None,
+                buffer_frac: float = 0.25) -> list[dict]:
+    """Sync-vs-async table: host throughput + simulated time-to-target.
+
+    ``buffers`` lists the async buffer sizes to benchmark against the one
+    sync arm; 0 means the frac-derived default (buffer = 0.25 n).  Small
+    explicit buffers (1 = FedAsync) get their event count scaled up so
+    every async arm merges about the same number of client updates as the
+    default arm — otherwise a buffer-1 run of ``rounds`` events would
+    train on ``rounds`` updates total and the latency comparison would be
+    meaningless.  Events are capped at ``_MAX_COMPARE_EVENTS`` (4000);
+    the cap is printed when it binds, and a capped arm merges fewer
+    updates than the default arm (compare its row accordingly).
+    """
     header = ["mode", "kernel", "clients", "rounds", "buffer", "compile_s",
               "run_s", "rounds_per_s", "sim_wall_s", "sim_s_to_loss",
               "final_loss", "mean_staleness"]
+    buffers = buffers or [0]
     rows, records = [], []
+
+    def emit(r):
+        records.append(r)
+        rows.append([r[h] for h in header])
+        print(f"{r['mode']:>5s} {r['kernel']:>9s} "
+              f"clients={r['clients']:>7d} buf={r['buffer']:>6d} "
+              f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
+              f"{r['rounds_per_s']:8.2f} rounds/s "
+              f"sim_wall={r['sim_wall_s']:8.1f}s "
+              f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s "
+              f"stale={r['mean_staleness']:4.1f}")
+
     for clients in counts:
+        cells, per_cell = _fleet_shape(clients)
+        n = cells * per_cell
+        buf_default = max(1, int(n * buffer_frac))
         for kernel in kernels:
-            pair = {}
-            for mode in ("sync", "async"):
-                r = bench_mode(clients, rounds, mode, kernel=kernel,
-                               target_loss=target_loss, repeats=repeats)
-                pair[mode] = r
-                records.append(r)
-                rows.append([r[h] for h in header])
-                print(f"{mode:>5s} {kernel:>9s} clients={clients:>7d} "
-                      f"compile={r['compile_s']:6.1f}s "
-                      f"run={r['run_s']:7.2f}s "
-                      f"{r['rounds_per_s']:8.2f} rounds/s "
-                      f"sim_wall={r['sim_wall_s']:8.1f}s "
-                      f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s "
-                      f"stale={r['mean_staleness']:4.1f}")
-            s = pair["sync"]["sim_s_to_loss"]
-            a = pair["async"]["sim_s_to_loss"]
-            if np.isfinite(s) and np.isfinite(a) and a > 0 and s > 0:
-                word = "sooner" if s >= a else "LATER"
-                ratio = s / a if s >= a else a / s
-                print(f"      clients={clients:>7d} async reaches "
-                      f"loss<{target_loss} {ratio:.2f}x {word} (simulated)")
+            sync = bench_mode(clients, rounds, "sync", kernel=kernel,
+                              target_loss=target_loss, repeats=repeats)
+            emit(sync)
+            for b in buffers:
+                buf = buf_default if b == 0 else b
+                events = max(1, round(rounds * buf_default / buf))
+                if events > _MAX_COMPARE_EVENTS:
+                    print(f"      buffer={buf}: capping events "
+                          f"{events} -> {_MAX_COMPARE_EVENTS}")
+                    events = _MAX_COMPARE_EVENTS
+                r = bench_mode(clients, rounds, "async", kernel=kernel,
+                               target_loss=target_loss, repeats=repeats,
+                               buffer_size=buf, events=events)
+                emit(r)
+                s, a = sync["sim_s_to_loss"], r["sim_s_to_loss"]
+                if np.isfinite(s) and np.isfinite(a) and a > 0 and s > 0:
+                    word = "sooner" if s >= a else "LATER"
+                    ratio = s / a if s >= a else a / s
+                    print(f"      clients={clients:>7d} async(buf={buf}) "
+                          f"reaches loss<{target_loss} {ratio:.2f}x {word} "
+                          f"(simulated)")
     path = common.write_csv("fleet_async_bench.csv", header, rows)
     print(f"wrote {path}")
     return records
@@ -231,6 +277,11 @@ def main() -> None:
                          "--json defaults to both)")
     ap.add_argument("--compare", action="store_true",
                     help="sync vs async buffered aggregation comparison")
+    ap.add_argument("--buffer", default="0",
+                    help="--compare: comma-separated async buffer sizes "
+                         "(0 = the 0.25n default; 1 = FedAsync — every "
+                         "arrival is its own server event, with the event "
+                         "count scaled to match total merged updates)")
     ap.add_argument("--target-loss", type=float, default=1.8,
                     help="--compare: simulated-time-to-loss threshold")
     ap.add_argument("--json", nargs="?", const="", default=None,
@@ -255,8 +306,9 @@ def main() -> None:
             counts = ([10000] if args.clients == "5,100,1000,10000"
                       else [int(c) for c in args.clients.split(",")])
             rounds = 50 if args.rounds == 20 else args.rounds
+        buffers = [int(b) for b in args.buffer.split(",")]
         records = run_compare(counts, rounds, args.target_loss, kernels,
-                              args.repeats)
+                              args.repeats, buffers=buffers)
         if emit_json:
             print(f"wrote {write_json(records, json_path)}")
         return

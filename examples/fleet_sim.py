@@ -13,24 +13,32 @@ round-by-round and final summary.
       --max-staleness 20           # buffered aggregation, no round barrier
   PYTHONPATH=src python examples/fleet_sim.py --mesh   # shard cells on "data"
   PYTHONPATH=src python examples/fleet_sim.py --smoke  # CI-sized sanity run
+  PYTHONPATH=src python examples/fleet_sim.py --task transformer --smoke \\
+      --metrics-out metrics.json  # production-model rounds (FleetTask)
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import math
 import time
 
 import numpy as np
 
 from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
-                         ScheduleConfig, run_fleet)
+                         ScheduleConfig, make_task, run_fleet)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cells", type=int, default=16)
     ap.add_argument("--per-cell", type=int, default=64)
+    ap.add_argument("--task", default="mlp",
+                    choices=["mlp", "transformer", "linreg"],
+                    help="FleetTask driving the rounds (fleet/task.py): "
+                         "the synthetic MLP (engine default), causal-LM "
+                         "transformer rounds, or linear regression")
     ap.add_argument("--rounds", type=int, default=30,
                     help="sync rounds / async server aggregation events")
     ap.add_argument("--weight", type=float, default=0.0004,
@@ -56,21 +64,38 @@ def main() -> None:
                     help="async: discount strength alpha")
     ap.add_argument("--cell-chunk", type=int, default=0,
                     help="cells per gradient-accumulation chunk (memory cap)")
-    ap.add_argument("--kernel", default="reference",
+    ap.add_argument("--kernel", default=None,
                     choices=["reference", "fused", "fused_xla",
                              "fused_pallas"],
                     help="client-gradient hot path: vmap+AD reference or "
                          "the block-sparse fused kernel "
-                         "(kernels/fleet_fused.py)")
+                         "(kernels/fleet_fused.py).  Default: reference "
+                         "for --task mlp, fused otherwise (non-MLP tasks "
+                         "exercise per-layer tile grids there)")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="learning rate (default: per-task)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--mesh", action="store_true",
                     help="shard the cell axis over the host mesh")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run: 2 cells x 8 clients, 3 rounds")
+                    help="CI-sized run: 2 cells x 8 clients, 3 rounds "
+                         "(--task transformer: 1 cell x 8, 10 rounds)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the run's trajectories as JSON (CI artifact)")
     args = ap.parse_args()
 
     if args.smoke:
-        args.cells, args.per_cell, args.rounds = 2, 8, 3
+        if args.task == "transformer":
+            # the transformer smoke is the acceptance run: >= 10 rounds,
+            # finite decreasing loss on per-layer tile grids
+            args.cells, args.per_cell, args.rounds = 1, 8, 10
+        else:
+            args.cells, args.per_cell, args.rounds = 2, 8, 3
+
+    kernel = args.kernel or ("reference" if args.task == "mlp" else "fused")
+    lr = args.lr if args.lr is not None else \
+        {"mlp": 1e-2, "transformer": 0.5, "linreg": 0.1}[args.task]
+    task = None if args.task == "mlp" else make_task(args.task)
 
     cfg = FleetConfig(
         topology=FleetTopology(num_cells=args.cells,
@@ -83,8 +108,8 @@ def main() -> None:
                                  max_staleness=args.max_staleness,
                                  staleness_discount=args.staleness_discount,
                                  staleness_alpha=args.staleness_alpha),
-        weight=args.weight, rounds=args.rounds, seed=args.seed,
-        cell_chunk=args.cell_chunk, kernel=args.kernel)
+        weight=args.weight, rounds=args.rounds, seed=args.seed, lr=lr,
+        cell_chunk=args.cell_chunk, kernel=kernel, task=task)
 
     mesh = None
     if args.mesh:
@@ -95,10 +120,33 @@ def main() -> None:
     n = cfg.topology.num_clients
     unit = "events" if mode == "async" else "rounds"
     print(f"fleet: {args.cells} cells x {args.per_cell} clients = {n} UEs, "
-          f"{args.rounds} {unit}, lambda={args.weight}, mode={mode}")
+          f"{args.rounds} {unit}, lambda={args.weight}, mode={mode}, "
+          f"task={args.task}, kernel={kernel}")
     t0 = time.time()
     res = run_fleet(cfg, mesh=mesh, progress=True, mode=mode)
     wall = time.time() - t0
+
+    # write metrics BEFORE the smoke assertion: a failing CI smoke must
+    # still ship the trajectory that explains it
+    if args.metrics_out:
+        doc = {
+            "task": args.task, "kernel": kernel, "mode": mode,
+            "clients": n, "rounds": args.rounds, "host_seconds": wall,
+            "losses": [float(x) for x in res.losses],
+            "accuracy": [float(x) for x in res.accuracy],
+            "wall_clock_s": [float(x) for x in res.wall_clock],
+            "mean_prune": [float(x) for x in res.mean_prune],
+            "bound_final": float(res.bound_final),
+        }
+        with open(args.metrics_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.metrics_out}")
+
+    if args.smoke and not (np.all(np.isfinite(res.losses))
+                           and res.losses[-1] < res.losses[0]):
+        raise SystemExit(
+            f"smoke run did not learn: losses {res.losses[0]:.4f} -> "
+            f"{res.losses[-1]:.4f}")
 
     print(f"\n{args.rounds} {unit} in {wall:.1f}s "
           f"({args.rounds / wall:.2f} {unit}/s incl. compile)")

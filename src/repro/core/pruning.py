@@ -39,10 +39,49 @@ __all__ = [
     "block_thresholds",
     "block_keep",
     "masks_from_state",
+    "masks_from_keep",
+    "leaf_blocks",
 ]
 
 PyTree = Any
 DEFAULT_BLOCK = 128
+
+# A block spec is an int (square tile edge), a (bk, bn) pair (rectangular
+# tiles — tall/skinny matrices like embeddings get their own grid), or a
+# *list* with one such entry per flattened leaf (None = unprunable /
+# DEFAULT_BLOCK).  Per-leaf lists are what lets every layer of a
+# heterogeneous model (transformer blocks vs the MLP) carry its own tile
+# grid instead of one model-wide ``prune_block``.
+BlockLike = Any
+
+
+def _block_pair(block) -> tuple[int, int]:
+    if isinstance(block, (int, np.integer)):
+        return (int(block), int(block))
+    bk, bn = block
+    return (int(bk), int(bn))
+
+
+def leaf_blocks(flags: list, block: BlockLike
+                ) -> list[Optional[tuple[int, int]]]:
+    """Normalize a block spec to one ``(bk, bn)`` pair per flattened leaf.
+
+    ``flags`` marks the prunable leaves (``_flatten_prunable`` order).  A
+    scalar/pair spec broadcasts over every prunable leaf; a *list* must
+    align with the flattened leaves and may mix ints, pairs and ``None``
+    (meaning ``DEFAULT_BLOCK``).  Unprunable leaves always map to ``None``.
+    """
+    if isinstance(block, list):
+        if len(block) != len(flags):
+            raise ValueError(
+                f"per-leaf block list has {len(block)} entries for "
+                f"{len(flags)} leaves")
+        return [
+            _block_pair(b if b is not None else DEFAULT_BLOCK) if f else None
+            for f, b in zip(flags, block)
+        ]
+    pair = _block_pair(block)
+    return [pair if f else None for f in flags]
 
 
 def prunable(path: tuple, leaf: jnp.ndarray) -> bool:
@@ -84,32 +123,38 @@ def magnitude_masks(params: PyTree, prune_rate: float) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, masked)
 
 
-def _pad_to_blocks(w: jnp.ndarray, block: int) -> jnp.ndarray:
+def _pad_to_blocks(w: jnp.ndarray, block: BlockLike) -> jnp.ndarray:
+    bk, bn = _block_pair(block)
     m, n = w.shape
-    pm, pn = (-m) % block, (-n) % block
+    pm, pn = (-m) % bk, (-n) % bn
     if pm or pn:
         w = jnp.pad(w, ((0, pm), (0, pn)))
     return w
 
 
-def block_l2_norms(w: jnp.ndarray, block: int = DEFAULT_BLOCK) -> jnp.ndarray:
-    """Squared L2 norm of each (block x block) tile of a 2-D matrix."""
-    w = _pad_to_blocks(w, block)
+def block_l2_norms(w: jnp.ndarray, block: BlockLike = DEFAULT_BLOCK
+                   ) -> jnp.ndarray:
+    """Squared L2 norm of each (bk x bn) tile of a 2-D matrix.  ``block`` is
+    an int (square tile) or a ``(bk, bn)`` pair."""
+    bk, bn = _block_pair(block)
+    w = _pad_to_blocks(w, (bk, bn))
     m, n = w.shape
-    t = w.reshape(m // block, block, n // block, block)
+    t = w.reshape(m // bk, bk, n // bn, bn)
     return jnp.sum(t.astype(jnp.float32) ** 2, axis=(1, 3))
 
 
-def _tile_element_counts(m: int, n: int, lead: int, block: int) -> jnp.ndarray:
+def _tile_element_counts(m: int, n: int, lead: int,
+                         block: BlockLike) -> jnp.ndarray:
     """Number of *real* (unpadded) elements in each tile of an (m, n) matrix,
     replicated over ``lead`` leading batch entries."""
-    rows = jnp.minimum(block, m - jnp.arange(0, m + (-m) % block, block))
-    cols = jnp.minimum(block, n - jnp.arange(0, n + (-n) % block, block))
+    bk, bn = _block_pair(block)
+    rows = jnp.minimum(bk, m - jnp.arange(0, m + (-m) % bk, bk))
+    cols = jnp.minimum(bn, n - jnp.arange(0, n + (-n) % bn, bn))
     counts = rows[:, None] * cols[None, :]
     return jnp.broadcast_to(counts, (lead,) + counts.shape)
 
 
-def _leaf_tile_norms(leaf: jnp.ndarray, block: int) -> jnp.ndarray:
+def _leaf_tile_norms(leaf: jnp.ndarray, block: BlockLike) -> jnp.ndarray:
     """Tile L2 norms over the *last two* dims; leading dims are batch-wise."""
     lead = leaf.shape[:-2]
     w2 = leaf.reshape((-1,) + leaf.shape[-2:])
@@ -117,7 +162,7 @@ def _leaf_tile_norms(leaf: jnp.ndarray, block: int) -> jnp.ndarray:
     return norms.reshape(lead + norms.shape[1:])
 
 
-def _leaf_tile_counts(leaf: jnp.ndarray, block: int) -> jnp.ndarray:
+def _leaf_tile_counts(leaf: jnp.ndarray, block: BlockLike) -> jnp.ndarray:
     m, n = leaf.shape[-2], leaf.shape[-1]
     lead = int(np.prod(leaf.shape[:-2], dtype=np.int64)) \
         if leaf.ndim > 2 else 1
@@ -137,20 +182,22 @@ class BlockNormState(NamedTuple):
     cum_frac: jnp.ndarray      # (T,) cumulative element mass of sorted tiles
 
 
-def block_norm_state(params: PyTree, block: int = DEFAULT_BLOCK
+def block_norm_state(params: PyTree, block: BlockLike = DEFAULT_BLOCK
                      ) -> list[Optional[BlockNormState]]:
     """Per-leaf ranking state, aligned with ``tree_flatten(params)`` order
     (``None`` for unprunable leaves).  Equivalent to the sort inside
     ``block_masks(scope="leaf")`` but factored out so a round computes it
-    once and reuses it for every client's threshold."""
+    once and reuses it for every client's threshold.  ``block`` may be a
+    per-leaf list (see ``leaf_blocks``) so every layer rides its own grid."""
     leaves, _, flags = _flatten_prunable(params)
+    blocks = leaf_blocks(flags, block)
     out: list[Optional[BlockNormState]] = []
-    for leaf, f in zip(leaves, flags):
+    for leaf, f, blk in zip(leaves, flags, blocks):
         if not f:
             out.append(None)
             continue
-        norms = _leaf_tile_norms(leaf, block)
-        counts = _leaf_tile_counts(leaf, block).reshape(-1).astype(jnp.float32)
+        norms = _leaf_tile_norms(leaf, blk)
+        counts = _leaf_tile_counts(leaf, blk).reshape(-1).astype(jnp.float32)
         flat = norms.reshape(-1)
         order = jnp.argsort(flat)
         cum = jnp.cumsum(counts[order])
@@ -192,35 +239,60 @@ def block_keep(state: list[Optional[BlockNormState]], rates: jnp.ndarray
     return out
 
 
-def _expand_tiles(keep: jnp.ndarray, shape: tuple, block: int) -> jnp.ndarray:
+def _expand_tiles(keep: jnp.ndarray, shape: tuple,
+                  block: BlockLike) -> jnp.ndarray:
     """Tile-level keep -> element-level boolean mask of ``shape``."""
+    bk, bn = _block_pair(block)
     m, n = shape[-2], shape[-1]
-    keep = jnp.repeat(jnp.repeat(keep, block, axis=-2), block, axis=-1)
+    keep = jnp.repeat(jnp.repeat(keep, bk, axis=-2), bn, axis=-1)
     return keep[..., :m, :n]
 
 
 def masks_from_state(params: PyTree, state: list[Optional[BlockNormState]],
-                     rate, block: int = DEFAULT_BLOCK) -> PyTree:
+                     rate, block: BlockLike = DEFAULT_BLOCK) -> PyTree:
     """Element-level boolean masks for one scalar rate from a precomputed
     ``block_norm_state`` — equals ``block_masks(params, rate, block,
     scope="leaf")`` by construction (``block_masks`` is implemented on
-    top of this)."""
+    top of this).  ``block`` must match the spec the state was built with."""
     rate = jnp.clip(jnp.asarray(rate), 0.0, 1.0)
     leaves, treedef, flags = _flatten_prunable(params)
+    blocks = leaf_blocks(flags, block)
     keep_all = rate <= 0.0
     masked = []
-    for leaf, f, st in zip(leaves, flags, state):
+    for leaf, f, st, blk in zip(leaves, flags, state, blocks):
         if not f:
             masked.append(jnp.ones(leaf.shape, bool))
             continue
         thresh = block_thresholds(st, rate)
         keep = (st.norms >= thresh) | keep_all
-        masked.append(_expand_tiles(keep, leaf.shape, block))
+        masked.append(_expand_tiles(keep, leaf.shape, blk))
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def masks_from_keep(params: PyTree, keeps: list, block: BlockLike) -> PyTree:
+    """One client's per-leaf tile-keep indicators -> element-level masks.
+
+    ``keeps`` aligns with ``tree_flatten(params)`` (``None`` for unprunable
+    leaves) and holds float/bool tile indicators shaped like the leaf's
+    ``block_norm_state`` norms — i.e. one entry of ``block_keep``'s batched
+    output.  The expansion matches ``masks_from_state`` tile-for-tile, so
+    the fused per-client path and the reference ``block_masks`` path build
+    identical masks from the same ranking state.
+    """
+    leaves, treedef, flags = _flatten_prunable(params)
+    blocks = leaf_blocks(flags, block)
+    masked = []
+    for leaf, f, keep, blk in zip(leaves, flags, keeps, blocks):
+        if not f:
+            masked.append(jnp.ones(leaf.shape, bool))
+            continue
+        masked.append(_expand_tiles(keep > 0, leaf.shape, blk))
     return jax.tree_util.tree_unflatten(treedef, masked)
 
 
 def block_masks(params: PyTree, prune_rate: float,
-                block: int = DEFAULT_BLOCK, scope: str = "leaf") -> PyTree:
+                block: BlockLike = DEFAULT_BLOCK, scope: str = "leaf"
+                ) -> PyTree:
     """TPU block-structured magnitude pruning.
 
     Each >=2-D leaf is reduced to tile L2 norms over its *last two* dims
@@ -249,13 +321,14 @@ def block_masks(params: PyTree, prune_rate: float,
 
     keep_all = rate <= 0.0
     leaves, treedef, flags = _flatten_prunable(params)
-    all_norms = [_leaf_tile_norms(l, block) if f else None
-                 for l, f in zip(leaves, flags)]
+    blocks = leaf_blocks(flags, block)
+    all_norms = [_leaf_tile_norms(l, b) if f else None
+                 for l, f, b in zip(leaves, flags, blocks)]
     norms_cat = jnp.concatenate(
         [n.reshape(-1) for n, f in zip(all_norms, flags) if f])
     counts_cat = jnp.concatenate(
-        [_leaf_tile_counts(l, block).reshape(-1)
-         for l, f in zip(leaves, flags) if f]).astype(jnp.float32)
+        [_leaf_tile_counts(l, b).reshape(-1)
+         for l, f, b in zip(leaves, flags, blocks) if f]).astype(jnp.float32)
     order = jnp.argsort(norms_cat)
     cum = jnp.cumsum(counts_cat[order])
     g_state = BlockNormState(norms=norms_cat, sorted_norms=norms_cat[order],
@@ -263,9 +336,9 @@ def block_masks(params: PyTree, prune_rate: float,
     g_thresh = block_thresholds(g_state, rate)
 
     masked = [
-        _expand_tiles((n >= g_thresh) | keep_all, l.shape, block)
+        _expand_tiles((n >= g_thresh) | keep_all, l.shape, b)
         if f else jnp.ones(l.shape, bool)
-        for l, f, n in zip(leaves, flags, all_norms)
+        for l, f, n, b in zip(leaves, flags, all_norms, blocks)
     ]
     return jax.tree_util.tree_unflatten(treedef, masked)
 

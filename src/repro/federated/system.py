@@ -3,6 +3,18 @@
 Couples every substrate: seeded channel -> trade-off optimizer (any scheme)
 -> per-client magnitude pruning -> local FedSGD -> packet-error-aware
 aggregation -> global update, with latency / convergence-bound tracking.
+
+Two 5-UE-scale paths coexist:
+
+* ``run`` — the original §V reproduction: numpy ``wireless.Channel``
+  draws, host solver (any scheme), synthetic dataset partitions.
+* ``run_fleet_reference`` — the *task-substrate* 5-UE path: the same
+  ``FleetTask`` object, population and PRNG draws as the fleet engine,
+  but stepped per round on the host with the paper's reference solver
+  (``core.tradeoff.solve_alternating``) instead of the on-device vmapped
+  port.  Fleet-path and 5-UE-path trajectories agree to 1e-5 under x64
+  (``tests/test_fleet_task.py``) — the cross-path equivalence the
+  closed-form controls alone used to pin.
 """
 
 from __future__ import annotations
@@ -15,10 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import TYPE_CHECKING
+
 from repro.core import aggregation, pruning, tradeoff, wireless
 from repro.core.convergence import ConvergenceBound, RoundTracker, SmoothnessParams
 from repro.data import synthetic
 from repro.models import mlp
+
+if TYPE_CHECKING:  # annotation-only: keep repro.fleet a lazy import
+    from repro.fleet.task import FleetTask
 
 SCHEMES = ("proposed", "gba", "fpr", "exhaustive", "ideal")
 
@@ -42,6 +59,12 @@ class FLConfig:
         default_factory=wireless.WirelessConfig)
     smoothness: SmoothnessParams = dataclasses.field(
         default_factory=SmoothnessParams)
+    # Optional FleetTask: routes run_any's "proposed" dispatch through the
+    # task substrate on BOTH sides of the threshold (host-stepped reference
+    # below it, fleet engine above), so the two paths simulate the same
+    # model/data and are trajectory-comparable.  ``run`` ignores it (the
+    # §V baselines keep the paper's synthetic dataset).
+    task: Optional["FleetTask"] = None
 
 
 @dataclasses.dataclass
@@ -134,26 +157,122 @@ def to_fleet_config(cfg: FLConfig, num_cells: int = 1, **overrides):
                          max_prune=cfg.max_prune)
     fields = dict(topology=topo, wireless=cfg.wireless,
                   smoothness=cfg.smoothness, weight=cfg.weight,
-                  rounds=cfg.rounds, lr=cfg.lr, seed=cfg.seed)
+                  rounds=cfg.rounds, lr=cfg.lr, seed=cfg.seed,
+                  task=cfg.task)
     fields.update(overrides)
     return FleetConfig(**fields)
+
+
+def _host_cell_solver(fcfg, pop):
+    """A ``solve_fn`` for the engine's control pass that runs the paper's
+    numpy reference solver (``core.tradeoff.solve_alternating``) per cell.
+
+    Plugged into ``engine._make_control_fn``, so every PRNG draw and
+    latency term is the engine's own code path — only the solver differs,
+    and the two solvers agree to 1e-6 (``test_fleet_solver.py``), which is
+    what makes whole-trajectory cross-path equivalence meaningful.
+    """
+    from repro.fleet import solver as FSOLVER
+
+    k_np = np.asarray(pop.num_samples)
+    cpu_np, pw_np = np.asarray(pop.cpu_hz), np.asarray(pop.tx_power)
+    mp_np = np.asarray(pop.max_prune)
+
+    def solve(h_up, mask, m_round, cap):
+        del mask, m_round, cap  # full participation, no deadline (checked)
+        h_up_np = np.asarray(h_up)
+        cells = h_up_np.shape[0]
+        prune = np.zeros_like(h_up_np)
+        bandwidth = np.zeros_like(h_up_np)
+        per = np.zeros_like(h_up_np)
+        deadline = np.zeros(cells)
+        inner = np.zeros(cells)
+        for c in range(cells):
+            bound = ConvergenceBound(fcfg.smoothness, k_np[c])
+            prob = tradeoff.TradeoffProblem(
+                cfg=fcfg.wireless, bound=bound, h_up=h_up_np[c],
+                h_down=np.ones_like(h_up_np[c]),  # unused by the solver
+                tx_power=pw_np[c], cpu_hz=cpu_np[c],
+                num_samples=k_np[c].astype(np.float64), max_prune=mp_np[c],
+                weight=fcfg.weight, num_rounds=fcfg.rounds)
+            sol_c = tradeoff.solve_alternating(
+                prob, max_iters=fcfg.solver.max_iters)
+            prune[c], bandwidth[c] = sol_c.prune, sol_c.bandwidth
+            per[c], deadline[c] = sol_c.per, sol_c.deadline
+            inner[c] = sol_c.inner_cost
+        return FSOLVER.CellSolution(
+            prune=jnp.asarray(prune), bandwidth=jnp.asarray(bandwidth),
+            deadline=jnp.asarray(deadline), per=jnp.asarray(per),
+            inner_cost=jnp.asarray(inner),
+            iterations=jnp.zeros(cells, jnp.int32),
+            feasible=jnp.ones(cells, bool))
+
+    return solve
+
+
+def run_fleet_reference(fcfg, progress: bool = False):
+    """The 5-UE path on the task substrate: per-round host stepping.
+
+    Same ``FleetTask``, population, PRNG draws and FedSGD/aggregation
+    update as ``run_fleet`` — the control pass is literally the engine's
+    ``_make_control_fn`` with the numpy reference ``solve_alternating``
+    plugged in as its ``solve_fn``, and the update half is the engine's
+    ``_make_apply_round_fn``.  The loop lives in python — one jitted
+    program per round, not one scan per run.  Returns a ``FleetResult``.
+    Sync / full participation / no deadline only (the host solver has no
+    participation-mask or deadline-cap port).
+    """
+    from repro.fleet import engine as FE
+
+    if fcfg.schedule.participation != "full" or fcfg.schedule.has_deadline:
+        raise NotImplementedError(
+            "run_fleet_reference supports full participation without a "
+            "round deadline (the host solver has no mask/cap port)")
+    cfg2, task, state, params, pop, k_data, keys = FE._build_common(fcfg)
+    control = FE._make_control_fn(cfg2, pop,
+                                  solve_fn=_host_cell_solver(cfg2, pop))
+    batch_fn, data = FE._make_batch_fn(task, state, cfg2, k_data)
+    apply_round = jax.jit(
+        FE._make_apply_round_fn(cfg2, task, state, pop, batch_fn, data))
+    zeros_ci = jnp.zeros(cfg2.topology.shape)
+    carry = (params, zeros_ci, zeros_ci)
+    mets = []
+    for rnd, rkey in enumerate(keys[:cfg2.rounds]):
+        carry, m = apply_round(carry, control(rkey))
+        mets.append(jax.tree.map(np.asarray, m))
+        if progress and (rnd % 10 == 0 or rnd == cfg2.rounds - 1):
+            print(f"[5ue] round {rnd:4d} loss={float(m['loss']):.4f} "
+                  f"acc={float(m['accuracy']):.4f}")
+    metrics = {k: np.stack([m[k] for m in mets]) for k in mets[0]}
+    sim = FE.Simulation(cfg=cfg2, simulate=None, params=params,
+                        round_keys=keys[:cfg2.rounds],
+                        num_samples=pop.num_samples, mode="sync")
+    return sim.finalize(carry, metrics)
 
 
 def run_any(cfg: FLConfig, progress: bool = False, fleet_threshold: int = 64,
             num_cells: int = 1, mesh=None):
     """Dispatch: small populations take the exact per-round host-solver
-    reference path (``run``, unchanged trajectories); populations past
+    reference path (unchanged trajectories); populations past
     ``fleet_threshold`` delegate to the scan-compiled fleet engine.
 
     Only the "proposed" scheme exists on-device — the §V baselines (GBA /
-    FPR / exhaustive) stay host-side reference implementations.
+    FPR / exhaustive) stay host-side reference implementations.  With
+    ``cfg.task`` set, both sides of the threshold run the *same*
+    ``FleetTask``: the small path is ``run_fleet_reference`` (host-stepped,
+    reference solver) and both return a ``FleetResult``, trajectory-equal
+    to 1e-5 under x64.
 
-    NOTE the return type switches with the path: the host path returns
-    ``FLResult`` (accuracy as [(round, acc)] pairs, list-typed traces);
-    the fleet path returns ``repro.fleet.FleetResult`` (dense per-round
-    ndarrays).  Callers that cross the threshold must handle both.
+    NOTE the return type switches with the path: the legacy host path
+    returns ``FLResult`` (accuracy as [(round, acc)] pairs, list-typed
+    traces); the task/fleet paths return ``repro.fleet.FleetResult``
+    (dense per-round ndarrays).  Callers that cross the threshold must
+    handle both.
     """
     if cfg.num_clients <= fleet_threshold or cfg.scheme != "proposed":
+        if cfg.task is not None and cfg.scheme == "proposed":
+            return run_fleet_reference(
+                to_fleet_config(cfg, num_cells=num_cells), progress=progress)
         return run(cfg, progress=progress)
     from repro.fleet import engine as FE
     return FE.run_fleet(to_fleet_config(cfg, num_cells=num_cells), mesh=mesh,

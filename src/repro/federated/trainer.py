@@ -19,7 +19,6 @@ semantics exactly.
 
 from __future__ import annotations
 
-import functools
 import inspect
 from typing import Any, Optional
 
@@ -33,7 +32,7 @@ except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map  # type: ignore
 
 from repro.core import aggregation, pruning
-from repro.models import model as M
+from repro.fleet.task import FleetTask, TransformerTask
 
 PyTree = Any
 
@@ -62,17 +61,19 @@ def num_clients(mesh: Mesh, client_axes: tuple[str, ...]) -> int:
     return n
 
 
-def make_fl_train_step(cfg, mesh: Mesh,
-                       client_axes: tuple[str, ...] = ("data",),
-                       block: int = 128, lr: float = 1e-2,
-                       tp_shard_params: bool = True):
-    """Build the jitted distributed FL train step for an ArchConfig model.
+def make_task_train_step(task: FleetTask, mesh: Mesh,
+                         client_axes: tuple[str, ...] = ("data",),
+                         lr: float = 1e-2, tp_shard_params: bool = True):
+    """Build the jitted distributed FL train step for any ``FleetTask``.
 
-    Signature of the returned fn:
+    The shard_map step is a consumer of the task substrate: masks come
+    from ``task.tile_grid`` (per-layer grids for heterogeneous models),
+    the local objective is ``task.loss``, and the Eq.-(5) aggregation /
+    FedSGD update are task-agnostic.  Signature of the returned fn:
         (params, batch, rho, arrivals, k) -> (params, metrics)
-      batch["tokens"]: (num_clients * per_client_batch, seq) sharded over
-      client axes; rho/arrivals/k: (num_clients,) host-computed by the
-      trade-off optimizer + channel simulation.
+      batch: task-batch pytree, every leaf (num_clients * per_client_batch,
+      ...) sharded over the client axes; rho/arrivals/k: (num_clients,)
+      host-computed by the trade-off optimizer + channel simulation.
 
     tp_shard_params: every client holds the full model *semantically*
     (FedSGD), but within a client the weights shard over the Auto tensor
@@ -88,11 +89,11 @@ def make_fl_train_step(cfg, mesh: Mesh,
         c_i = arrivals[0]
         k_i = k[0]
 
-        masks = pruning.block_masks(params, rho_i, block=block)
+        masks = pruning.block_masks(params, rho_i,
+                                    block=task.tile_grid(params))
 
         def loss_fn(p):
-            total, _ = M.loss_fn(cfg, pruning.apply_masks(p, masks), batch)
-            return total
+            return task.loss(pruning.apply_masks(p, masks), batch)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         grads = pruning.apply_masks(grads, masks)
@@ -106,25 +107,41 @@ def make_fl_train_step(cfg, mesh: Mesh,
     # Hybrid manual/auto: the client axes are Manual (explicit psum for the
     # Eq. (5) aggregation), every other mesh axis (the tensor axis) stays
     # Auto so the per-client model computation is partitioned across it by
-    # GSPMD + the model's logical sharding constraints.
+    # GSPMD + the model's logical sharding constraints.  The batch spec is
+    # a pytree *prefix*: P(caxes) broadcasts over every batch leaf.
     mapped = _hybrid_shard_map(
         step, mesh,
-        in_specs=(P(), {"tokens": P(caxes)}, P(caxes), P(caxes), P(caxes)),
+        in_specs=(P(), P(caxes), P(caxes), P(caxes), P(caxes)),
         out_specs=(P(), {"loss": P(), "achieved_rho": P(caxes)}),
         manual_axes=client_axes)
 
     if tp_shard_params and "model" in mesh.axis_names \
             and mesh.shape["model"] > 1:
         from repro.launch import shardings as SH
-        params_shape = jax.eval_shape(
-            functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+        params_shape = jax.eval_shape(task.init_params, jax.random.PRNGKey(0))
         p_shard = SH.param_shardings(params_shape, mesh, fsdp=False)
         cshard = NamedSharding(mesh, P(caxes))
         return jax.jit(mapped,
-                       in_shardings=(p_shard, {"tokens": cshard}, cshard,
+                       in_shardings=(p_shard, cshard, cshard,
                                      cshard, cshard),
                        out_shardings=(p_shard, None))
     return jax.jit(mapped)
+
+
+def make_fl_train_step(cfg, mesh: Mesh,
+                       client_axes: tuple[str, ...] = ("data",),
+                       block: int = 128, lr: float = 1e-2,
+                       tp_shard_params: bool = True):
+    """Build the jitted distributed FL train step for an ArchConfig model.
+
+    Thin wrapper: wraps ``cfg`` in a ``TransformerTask`` (uniform ``block``
+    tile grid, matching the historical behaviour) and delegates to
+    ``make_task_train_step`` — the transformer path and the fleet engine
+    now consume the same task object.
+    """
+    task = TransformerTask(arch=cfg, block=block)
+    return make_task_train_step(task, mesh, client_axes=client_axes, lr=lr,
+                                tp_shard_params=tp_shard_params)
 
 
 def fl_input_specs(cfg, mesh: Mesh, client_axes: tuple[str, ...],

@@ -11,6 +11,10 @@ merging (``run_fleet(..., mode="async")``, configured by ``AsyncConfig``).
 """
 
 from repro.fleet.engine import (  # noqa: F401
-    FleetConfig, FleetResult, build_simulation, run, run_fleet, time_to_loss)
+    FleetConfig, FleetResult, build_simulation, resolve_task, run, run_fleet,
+    time_to_loss)
 from repro.fleet.scheduler import AsyncConfig, ScheduleConfig  # noqa: F401
+from repro.fleet.task import (  # noqa: F401
+    FleetTask, LinearRegressionTask, SyntheticMLPTask, TransformerTask,
+    make_task)
 from repro.fleet.topology import FleetTopology  # noqa: F401

@@ -22,30 +22,42 @@ Two aggregation modes share the per-round control path (``_round_control``):
   (whole cohort) and full participation the event timeline degenerates to
   the round barrier and async equals sync (equivalence-tested).
 
-Data/model: a deterministic synthetic classification task (per-class
-Gaussian templates).  Each client's local batch derives from a *fixed*
-per-client fold of the data key — identical samples each round (the FL
-fixed-local-dataset setting).  Below ``cache_data``'s memory limit the
-batches are materialized once at build time; above it they regenerate on
-the fly inside the scan, so memory stays bounded by the cell-chunked
-gradient accumulation (sync) or by ``buffer_size`` (async).  Local
-batches share one static size ``local_batch`` (shape-uniform for vmap);
-the heterogeneous K_i act through aggregation weights and the latency
-model, as in the paper's Eqs. (2)-(5).
+Data/model: everything task-specific lives behind the ``FleetTask``
+protocol (``fleet/task.py``) — the engine only sees ``init_params``,
+``client_batch``, ``loss``, ``eval_metrics`` and the fused-kernel hooks.
+The default task (built from ``FleetConfig``'s legacy ``feature_dim`` /
+``hidden`` / ... fields via ``resolve_task``) is the original
+``SyntheticMLPTask`` — bit-identical trajectories to the pre-task engine;
+``TransformerTask`` runs production-model causal-LM rounds and
+``LinearRegressionTask`` pins exact convergence rates.  Each client's
+local batch derives from a *fixed* per-client fold of the data key —
+identical samples each round (the FL fixed-local-dataset setting).  Below
+``cache_data``'s memory limit the batches are materialized once at build
+time; above it they regenerate on the fly inside the scan, so memory
+stays bounded by the cell-chunked gradient accumulation (sync) or by
+``buffer_size`` (async).  Local batches share one static per-task batch
+size (shape-uniform for vmap); the heterogeneous K_i act through
+aggregation weights and the latency model, as in the paper's Eqs. (2)-(5).
 
-Client-gradient hot path: ``FleetConfig.kernel`` selects the PR-2
-vmap + AD "reference" batch or the block-sparse "fused" streaming kernel
-(``kernels/fleet_fused.py``) whose compute scales with (1 - rho) —
-see docs/fleet.md §"Client-gradient kernels".
+Client-gradient hot path: ``FleetConfig.kernel`` selects the vmap + AD
+"reference" batch or the task's fused kernel hook
+(``FleetTask.kernel_grads``): the MLP task streams client tiles through
+the block-sparse Pallas/XLA kernels (``kernels/fleet_fused.py``); generic
+tasks stream clients through ``fleet_fused.masked_scan_grads`` with
+per-layer tile grids (``FleetTask.tile_grid``) — either way compute never
+materializes the (clients, params) gradient batch.  See docs/fleet.md.
 
 Sharding: pass a mesh from ``launch.mesh`` and the cell axis of every
 population/fading tensor is placed on the mesh's "data" axis
-(NamedSharding), so XLA partitions the per-client work across devices.
+(NamedSharding); inside the round the flattened *client* axis of the
+gradient batch is additionally constrained to "data", so XLA partitions
+the per-client work across devices in both layouts.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -60,8 +72,7 @@ from repro.core.convergence import ConvergenceBound, SmoothnessParams
 from repro.fleet import scheduler as SCHED
 from repro.fleet import solver as SOLVER
 from repro.fleet import topology as TOPO
-from repro.kernels import fleet_fused as FUSED
-from repro.models import mlp
+from repro.fleet import task as TASK
 
 PyTree = Any
 
@@ -70,7 +81,13 @@ PyTree = Any
 class FleetConfig:
     """Everything a fleet run needs; all fields have Table-I-flavoured
     defaults.  Units: seconds / Hz / watts follow ``wireless.WirelessConfig``;
-    ``weight`` is the dimensionless trade-off lambda of problem (12)."""
+    ``weight`` is the dimensionless trade-off lambda of problem (12).
+
+    The *task* (model + data + loss) is ``task``; when None, the legacy
+    synthetic-task fields below build a ``SyntheticMLPTask`` (bit-identical
+    to the pre-task engine — setting them away from their defaults emits a
+    ``DeprecationWarning``; pass ``task=SyntheticMLPTask(...)`` instead).
+    """
 
     topology: TOPO.FleetTopology = dataclasses.field(
         default_factory=TOPO.FleetTopology)
@@ -88,8 +105,11 @@ class FleetConfig:
     rounds: int = 50                  # sync rounds / async server events
     lr: float = 1e-2
     seed: int = 0
-    # synthetic task (kept small: the engine's subject is the system, and
-    # per-client gradient state scales as clients x params)
+    # the model-pluggable task substrate (fleet/task.py); None -> legacy
+    # fields below via resolve_task()
+    task: Optional[TASK.FleetTask] = None
+    # DEPRECATED synthetic-task fields (pre-task engine API): used only
+    # when task is None, to build the equivalent SyntheticMLPTask
     feature_dim: int = 32
     hidden: tuple[int, ...] = (16,)
     num_classes: int = 4
@@ -98,27 +118,63 @@ class FleetConfig:
     test_samples: int = 512
     # gradient accumulation: cells per scan chunk (0 = whole fleet at once)
     cell_chunk: int = 0
-    # client-gradient hot path: "reference" is the vmap + AD batch
-    # (PR-2 behaviour); "fused" streams tiles of clients through the
-    # block-sparse fused kernel (kernels/fleet_fused.py) and never
-    # materializes the (clients, params) gradient batch.  "fused_xla" /
-    # "fused_pallas" pin the implementation (fused = Pallas on TPU, XLA
-    # elsewhere; Pallas runs interpret off-TPU).
+    # client-gradient hot path: "reference" is the vmap + AD batch;
+    # "fused" runs the task's fused kernel hook (the MLP task streams
+    # tiles of clients through kernels/fleet_fused.py and never
+    # materializes the (clients, params) gradient batch; generic tasks
+    # stream clients through masked_scan_grads on their per-layer tile
+    # grids).  "fused_xla" / "fused_pallas" pin the MLP-kernel
+    # implementation (fused = Pallas on TPU, XLA elsewhere; Pallas runs
+    # interpret off-TPU).
     kernel: str = "reference"
-    # reference-path mask rule: "magnitude" (paper-style unstructured,
-    # PR-2 behaviour) or "block" (block-norm threshold masks — what the
-    # fused path always uses; set it on the reference path to
+    # reference-path mask rule: "magnitude" (paper-style unstructured)
+    # or "block" (block-norm threshold masks on the task's tile grid —
+    # what the fused path always uses; set it on the reference path to
     # equivalence-test fused trajectories)
     mask_kind: str = "magnitude"
-    # block edge for block-structured pruning (small: the fleet MLP's
-    # matrices are far below one 128x128 MXU pass)
+    # block edge for the legacy SyntheticMLPTask's block pruning (small:
+    # the fleet MLP's matrices are far below one 128x128 MXU pass);
+    # explicit tasks carry their own grids (FleetTask.tile_grid)
     prune_block: int = 8
     # Materialize every client's (fixed) local batch once at build time
     # instead of re-deriving it from the PRNG inside every scan step —
     # identical draws, amortized threefry/erfinv cost.  None = auto: cache
-    # unless the (clients, batch, dim) tensor would exceed ~512 MB (the
-    # 1M-client regime keeps the streaming regeneration).
+    # unless the per-client batches would exceed ~512 MB (the 1M-client
+    # regime keeps the streaming regeneration).
     cache_data: Optional[bool] = None
+
+
+_LEGACY_TASK_FIELDS = ("feature_dim", "hidden", "num_classes", "local_batch",
+                       "data_noise", "test_samples")
+
+
+def resolve_task(cfg: FleetConfig) -> TASK.FleetTask:
+    """The run's task: ``cfg.task``, or the legacy-field SyntheticMLPTask.
+
+    Non-default legacy task fields with no explicit task emit a
+    ``DeprecationWarning`` — the old ``FleetConfig(feature_dim=...,
+    hidden=...)`` API keeps producing bit-identical trajectories through
+    the shim, but new code should pass ``task=SyntheticMLPTask(...)``.
+    """
+    if cfg.task is not None:
+        return cfg.task
+    defaults = {f.name: f.default for f in dataclasses.fields(FleetConfig)}
+
+    def norm(v):  # list-vs-tuple spellings of the same value are equal
+        return tuple(v) if isinstance(v, (list, tuple)) else v
+
+    if any(norm(getattr(cfg, n)) != norm(defaults[n])
+           for n in _LEGACY_TASK_FIELDS):
+        warnings.warn(
+            "FleetConfig's synthetic-task fields (feature_dim, hidden, "
+            "num_classes, local_batch, data_noise, test_samples) are "
+            "deprecated; pass FleetConfig(task=SyntheticMLPTask(...)) "
+            "instead.", DeprecationWarning, stacklevel=3)
+    return TASK.SyntheticMLPTask(
+        feature_dim=cfg.feature_dim, hidden=tuple(cfg.hidden),
+        num_classes=cfg.num_classes, local_batch=cfg.local_batch,
+        data_noise=cfg.data_noise, test_samples=cfg.test_samples,
+        prune_block=cfg.prune_block)
 
 
 @dataclasses.dataclass
@@ -133,7 +189,7 @@ class FleetResult:
     """
 
     losses: np.ndarray            # (rounds,)
-    accuracy: np.ndarray          # (rounds,)
+    accuracy: np.ndarray          # (rounds,) task eval metric
     latencies: np.ndarray         # (rounds,) realized round latency, s (Eq. 4)
     deadlines: np.ndarray         # (rounds, C) solver deadlines t~*, s
     mean_prune: np.ndarray        # (rounds,) scheduled-client mean rho
@@ -148,73 +204,58 @@ class FleetResult:
     mode: str = "sync"
 
 
-def _class_templates(key: jax.Array, num_classes: int, dim: int) -> jnp.ndarray:
-    return jax.random.normal(key, (num_classes, dim))
-
-
-def _client_batch(data_key: jax.Array, client_idx: jnp.ndarray,
-                  templates: jnp.ndarray, batch: int, noise: float):
-    """Deterministic local dataset of one client (same draw every round)."""
-    ck = jax.random.fold_in(data_key, client_idx)
-    ky, kx = jax.random.split(ck)
-    y = jax.random.randint(ky, (batch,), 0, templates.shape[0])
-    x = templates[y] + noise * jax.random.normal(
-        kx, (batch, templates.shape[1]))
-    return x, y
-
-
 _CACHE_LIMIT_BYTES = 512 << 20
 
 
-def _make_batch_fn(cfg: FleetConfig, data_key: jax.Array,
-                   templates: jnp.ndarray):
-    """flat client indices -> (x, y) local batches.
+def _make_batch_fn(task: TASK.FleetTask, state: PyTree, cfg: FleetConfig,
+                   data_key: jax.Array):
+    """flat client indices -> batch pytree (every leaf leading-dim clients).
 
     When the whole fleet's data fits ``_CACHE_LIMIT_BYTES`` (or
     ``cfg.cache_data`` forces it), every client's fixed batch is derived
     from the PRNG *once* here and scan steps just gather rows — the draws
     are bit-identical to the streaming path, which re-runs
-    ``_client_batch`` (threefry + erfinv per round) inside the scan and
-    stays the default above the memory limit.
+    ``task.client_batch`` inside the scan and stays the default above the
+    memory limit.
     """
     n = cfg.topology.num_clients
 
     def generate(flat_idx):
-        return jax.vmap(lambda ci: _client_batch(
-            data_key, ci, templates, cfg.local_batch, cfg.data_noise)
-        )(flat_idx)
+        return jax.vmap(
+            lambda ci: task.client_batch(state, data_key, ci))(flat_idx)
 
     cache = cfg.cache_data
     if cache is None:
-        nbytes = n * cfg.local_batch * (cfg.feature_dim + 1) * 4
-        cache = nbytes <= _CACHE_LIMIT_BYTES
+        shapes = jax.eval_shape(generate,
+                                jax.ShapeDtypeStruct((n,), jnp.int32))
+        nbytes = sum(int(np.prod(l.shape, dtype=np.int64)) * l.dtype.itemsize
+                     for l in jax.tree_util.tree_leaves(shapes))
+        cache = task.cache_batches and nbytes <= _CACHE_LIMIT_BYTES
     if not cache:
         return generate, None
-    x_all, y_all = generate(jnp.arange(n, dtype=jnp.int32))
+    data = generate(jnp.arange(n, dtype=jnp.int32))
 
     def gather(flat_idx):
-        return x_all[flat_idx], y_all[flat_idx]
+        return jax.tree.map(lambda a: a[flat_idx], data)
 
-    return gather, (x_all, y_all)
+    return gather, data
 
 
-def _client_grad(params: PyTree, rho_i: jnp.ndarray, x: jnp.ndarray,
-                 y: jnp.ndarray, cfg: FleetConfig
+def _client_grad(task: TASK.FleetTask, params: PyTree, rho_i: jnp.ndarray,
+                 batch: PyTree, cfg: FleetConfig
                  ) -> tuple[jnp.ndarray, PyTree]:
     """Masked local gradient: rho-level masks, grad at the pruned point,
     gradient re-masked (exactly the 5-client path's client_grad).  The
     mask rule follows ``cfg.mask_kind``: unstructured magnitude pruning
-    (paper-style) or block-norm threshold masks (the fused kernel's)."""
+    (paper-style) or block-norm threshold masks on the task's tile grid
+    (the fused kernel's)."""
     if cfg.mask_kind == "block":
-        masks = pruning.block_masks(params, rho_i, block=cfg.prune_block)
+        masks = pruning.block_masks(params, rho_i,
+                                    block=task.tile_grid(params))
     else:
         masks = pruning.magnitude_masks(params, rho_i)
     pruned = pruning.apply_masks(params, masks)
-
-    def loss_fn(p):
-        return mlp.classifier_loss(p, x, y)
-
-    loss, g = jax.value_and_grad(loss_fn)(pruned)
+    loss, g = jax.value_and_grad(lambda p: task.loss(p, batch))(pruned)
     return loss, pruning.apply_masks(g, masks)
 
 
@@ -253,9 +294,26 @@ def _chunk_accumulate(step, arrays: tuple, chunk: int):
     return out
 
 
-def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
-                 sched_w: jnp.ndarray, batch_fn, cfg: FleetConfig,
-                 data=None):
+def _constrain_clients(tree, mesh):
+    """Constrain the leading (flat client) axis of batch leaves to the mesh
+    "data" axis — the fleet gradient batch shards over devices client-wise
+    (the ROADMAP's client-axis sharding direction)."""
+    if mesh is None or "data" not in mesh.axis_names:
+        return tree
+    n = mesh.shape["data"]
+
+    def put(a):
+        if a.ndim >= 1 and a.shape[0] % n == 0:
+            return jax.lax.with_sharding_constraint(
+                a, NamedSharding(mesh, P("data")))
+        return a
+
+    return jax.tree.map(put, tree)
+
+
+def _fleet_grads(task: TASK.FleetTask, params: PyTree, rho: jnp.ndarray,
+                 agg_w: jnp.ndarray, sched_w: jnp.ndarray, batch_fn,
+                 cfg: FleetConfig, data=None, mesh=None):
     """Weighted-sum gradients over the fleet, cell-chunked.
 
     Returns (grad_wsum pytree, sum agg_w, mean scheduled loss).  agg_w is
@@ -263,12 +321,12 @@ def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
     sched_w weights the loss metric (scheduled clients).
 
     ``cfg.kernel`` picks the hot path: "reference" vmaps per-client AD
-    and reduces the (clients, params) gradient batch; "fused*" ranks the
-    round's block norms once (``layer_norm_states``) and streams client
-    tiles through ``kernels.fleet_fused`` so only the accumulated sum is
-    ever materialized.
+    and reduces the (clients, params) gradient batch; "fused*" builds the
+    round's block-ranking state once (``task.kernel_prepare``) and streams
+    client tiles through ``task.kernel_grads`` so only the accumulated sum
+    is ever materialized.
 
-    ``data`` is the optional cached (x_all, y_all) from ``_make_batch_fn``
+    ``data`` is the optional cached batch pytree from ``_make_batch_fn``
     — when present, batches ride the chunk scan as contiguous slices
     (a general gather over a 100 MB table thrashes caches at 100k+
     clients); otherwise ``batch_fn`` regenerates them per chunk.
@@ -278,24 +336,23 @@ def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
     idx = jnp.arange(c * i, dtype=jnp.int32).reshape(rho.shape)
 
     arrays = [idx, rho, agg_w, sched_w]
+    data_def = None
     if data is not None:
-        x_all, y_all = data
-        arrays.append(x_all.reshape((c, i) + x_all.shape[1:]))
-        arrays.append(y_all.reshape((c, i) + y_all.shape[1:]))
+        data_leaves, data_def = jax.tree_util.tree_flatten(data)
+        arrays += [a.reshape((c, i) + a.shape[1:]) for a in data_leaves]
 
     def batches(c_idx, extra):
         if extra:
-            xc, yc = extra
-            return (xc.reshape((-1,) + xc.shape[2:]),
-                    yc.reshape((-1,) + yc.shape[2:]))
+            leaves = [a.reshape((-1,) + a.shape[2:]) for a in extra]
+            return jax.tree_util.tree_unflatten(data_def, leaves)
         return batch_fn(c_idx.reshape(-1))
 
     if cfg.kernel == "reference":
         def step(c_idx, c_rho, c_w, c_lw, *extra):
-            x, y = batches(c_idx, extra)
+            batch = _constrain_clients(batches(c_idx, extra), mesh)
             losses, grads = jax.vmap(
-                lambda xi, yi, ri: _client_grad(params, ri, xi, yi, cfg)
-            )(x, y, c_rho.reshape(-1))
+                lambda b, ri: _client_grad(task, params, ri, b, cfg)
+            )(batch, c_rho.reshape(-1))
             w_flat = c_w.reshape(-1)
             lw_flat = c_lw.reshape(-1)
             g = jax.tree.map(
@@ -303,17 +360,16 @@ def _fleet_grads(params: PyTree, rho: jnp.ndarray, agg_w: jnp.ndarray,
             return (g, jnp.sum(w_flat), jnp.sum(losses * lw_flat),
                     jnp.sum(lw_flat))
     else:
-        # once per round: the full sort of every layer's tile norms —
+        # once per round: the full ranking of every layer's tile norms —
         # per-client masks below are one searchsorted each
-        states = FUSED.layer_norm_states(params, cfg.prune_block)
+        prep = task.kernel_prepare(params)
 
         def step(c_idx, c_rho, c_w, c_lw, *extra):
-            x, y = batches(c_idx, extra)
-            keeps = FUSED.layer_keeps(states, c_rho.reshape(-1))
+            batch = _constrain_clients(batches(c_idx, extra), mesh)
             w_flat = c_w.reshape(-1)
-            g, losses = FUSED.fused_fleet_grads(
-                params, x, y, keeps, w_flat, cfg.prune_block,
-                impl=_kernel_impl(cfg))
+            g, losses = task.kernel_grads(params, prep, batch,
+                                          c_rho.reshape(-1), w_flat,
+                                          impl=_kernel_impl(cfg))
             lw_flat = c_lw.reshape(-1)
             return (g, jnp.sum(w_flat), jnp.sum(losses * lw_flat),
                     jnp.sum(lw_flat))
@@ -336,11 +392,20 @@ class RoundControl(NamedTuple):
     m_round: jnp.ndarray    # (C,) scheduled-subset Eq.-(11) coefficient
 
 
-def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation):
+def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
+                     solve_fn=None):
     """Build the per-key control pass shared by the sync round and the
     async start/restart: fading -> schedule -> solver -> latency -> packet
     draws.  Both modes consume keys in the same order, which is what makes
-    the buffer-equals-cohort async run reproduce sync draws exactly."""
+    the buffer-equals-cohort async run reproduce sync draws exactly.
+
+    ``solve_fn(h_up, mask, m_round, cap) -> CellSolution`` swaps the
+    on-device vmapped solver for another implementation — the 5-UE host
+    reference path (``federated/system.py``) plugs the numpy
+    ``solve_alternating`` in here, so *every* draw and latency term stays
+    this one code path and the cross-path equivalence can only be broken
+    by the solvers themselves.
+    """
     w = cfg.wireless
     n0, b_hz = w.noise_psd_w_per_hz, w.bandwidth_hz
 
@@ -368,12 +433,16 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation):
             cap = jnp.maximum(cfg.schedule.round_deadline_s
                               - w.aggregation_latency_s - t_d[..., 0], 0.0)
 
-        sol = SOLVER.solve_fleet(
-            h_up, pop.num_samples, pop.cpu_hz, pop.tx_power, pop.max_prune,
-            m_round, mask, cap, bandwidth_hz=b_hz, noise_psd=n0,
-            waterfall_m0=w.waterfall_m0, model_bits=w.model_bits,
-            cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
-            solver=cfg.solver)
+        if solve_fn is None:
+            sol = SOLVER.solve_fleet(
+                h_up, pop.num_samples, pop.cpu_hz, pop.tx_power,
+                pop.max_prune, m_round, mask, cap, bandwidth_hz=b_hz,
+                noise_psd=n0, waterfall_m0=w.waterfall_m0,
+                model_bits=w.model_bits,
+                cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
+                solver=cfg.solver)
+        else:
+            sol = solve_fn(h_up, mask, m_round, cap)
 
         # Realized per-client latency (Eq. 4 terms, broadcast over cells).
         t_c = CF.training_latency(sol.prune, pop.num_samples,
@@ -397,17 +466,28 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation):
 # Synchronous (barrier) rounds
 # ---------------------------------------------------------------------------
 
-def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
-                   templates: jnp.ndarray, data_key: jax.Array,
-                   x_test: jnp.ndarray, y_test: jnp.ndarray):
+def _merge_eval(metrics: dict, task: TASK.FleetTask, state: PyTree,
+                params: PyTree) -> dict:
+    """Fold the task's eval metrics into the round metrics ("accuracy" is
+    required; extra task metrics ride along under an ``eval_`` prefix)."""
+    ev = dict(task.eval_metrics(state, params))
+    metrics["accuracy"] = ev.pop("accuracy")
+    metrics.update({f"eval_{k}": v for k, v in ev.items()})
+    return metrics
+
+
+def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
+                         state: PyTree, pop: TOPO.ClientPopulation,
+                         batch_fn, data, mesh=None):
+    """The model/aggregation half of a sync round: consume a RoundControl
+    (from the scan's on-device solver *or* a host-side reference solver —
+    how ``federated/system.py`` reuses this) and produce the FedSGD update
+    plus metrics."""
     w = cfg.wireless
     b_hz = w.bandwidth_hz
-    control = _make_control_fn(cfg, pop)
-    batch_fn, data = _make_batch_fn(cfg, data_key, templates)
 
-    def round_fn(carry, rkey):
+    def apply_round(carry, ctl: RoundControl):
         params, per_sum, prune_sum = carry
-        ctl = control(rkey)
         mask, sol, t_client = ctl.mask, ctl.sol, ctl.t_client
 
         on_time = SCHED.on_time_mask(t_client + w.aggregation_latency_s,
@@ -417,10 +497,12 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         agg_w = pop.num_samples * arrivals                      # K_i C_i
 
         g_wsum, w_sum, mean_loss = _fleet_grads(
-            params, sol.prune, agg_w, mask, batch_fn, cfg, data=data)
+            task, params, sol.prune, agg_w, mask, batch_fn, cfg, data=data,
+            mesh=mesh)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
         new_params = jax.tree.map(
-            lambda p, g: jnp.where(w_sum > 0, p - cfg.lr * g / denom, p),
+            lambda p, g: jnp.where(
+                w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
             params, g_wsum)
 
         # Metrics + bound statistics (effective loss prob folds scheduling,
@@ -434,11 +516,9 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         k_all = pop.num_samples
         learning = jnp.sum(
             ctl.m_round[:, None] * k_all * (q_eff + k_all * sol.prune) * mask)
-        acc = mlp.accuracy(new_params, x_test, y_test)
 
         metrics = {
             "loss": mean_loss,
-            "accuracy": acc,
             "round_latency": round_lat,
             "deadline": sol.deadline,
             "mean_prune": jnp.sum(sol.prune * mask) / n_sched,
@@ -447,8 +527,23 @@ def _make_round_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             "bandwidth_util": jnp.sum(sol.bandwidth, axis=-1) / b_hz,
             "learning_cost": learning,
         }
+        metrics = _merge_eval(metrics, task, state, new_params)
         return (new_params, per_sum + q_eff, prune_sum + sol.prune * mask), \
             metrics
+
+    return apply_round
+
+
+def _make_round_fn(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
+                   pop: TOPO.ClientPopulation, data_key: jax.Array,
+                   mesh=None):
+    control = _make_control_fn(cfg, pop)
+    batch_fn, data = _make_batch_fn(task, state, cfg, data_key)
+    apply_round = _make_apply_round_fn(cfg, task, state, pop, batch_fn, data,
+                                       mesh=mesh)
+
+    def round_fn(carry, rkey):
+        return apply_round(carry, control(rkey))
 
     return round_fn
 
@@ -513,9 +608,9 @@ def _start_state(ctl: RoundControl, now, version, prev: Optional[AsyncState],
         per_sum=prev.per_sum, prune_sum=prev.prune_sum)
 
 
-def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
-                     templates: jnp.ndarray, data_key: jax.Array,
-                     x_test: jnp.ndarray, y_test: jnp.ndarray):
+def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
+                     pop: TOPO.ClientPopulation, data_key: jax.Array,
+                     mesh=None):
     """One server event: fill the buffer with the K earliest arrivals,
     merge them (staleness-discounted) against the param ring buffer, bump
     the version, restart the merged clients with a fresh control draw."""
@@ -525,7 +620,7 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     k_buf = acfg.cohort_buffer(n)
     hist_len = acfg.history_len
     control = _make_control_fn(cfg, pop)
-    batch_fn, _ = _make_batch_fn(cfg, data_key, templates)
+    batch_fn, _ = _make_batch_fn(task, state, cfg, data_key)
     k_flat = pop.num_samples.reshape(-1)
 
     def gather(a: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
@@ -548,17 +643,17 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             max_staleness=acfg.max_staleness, xp=jnp)
 
         # -- 3. gradients at each client's *download* version (ring buffer)
+        ldtype = jnp.result_type(float)
+        batch = _constrain_clients(batch_fn(sel), mesh)
         if cfg.kernel == "reference":
-            x, y = batch_fn(sel)
-
-            def one(xi, yi, rho_i, tau_i):
+            def one(b_i, rho_i, tau_i):
                 slot = (head - jnp.clip(tau_i, 0, hist_len - 1)) % hist_len
                 stale_params = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(
                         a, slot, 0, keepdims=False), hist)
-                return _client_grad(stale_params, rho_i, xi, yi, cfg)
+                return _client_grad(task, stale_params, rho_i, b_i, cfg)
 
-            losses, grads = jax.vmap(one)(x, y, gather(st.rho, sel), tau)
+            losses, grads = jax.vmap(one)(batch, gather(st.rho, sel), tau)
             g_wsum = jax.tree.map(
                 lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
         else:
@@ -566,30 +661,29 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             # so each populated slot streams through the fused kernel
             # once; empty slots are skipped by lax.cond, so the common
             # low-staleness event costs ~one kernel sweep, not hist_len.
-            x, y = batch_fn(sel)
             rho_sel = gather(st.rho, sel)
             slot_all = (head - jnp.clip(tau, 0, hist_len - 1)) % hist_len
             g_wsum = jax.tree.map(
                 lambda a: jnp.zeros(a.shape[1:], a.dtype), hist)
-            losses = jnp.zeros(sel.shape, x.dtype)
+            losses = jnp.zeros(sel.shape, ldtype)
             for s in range(hist_len):
                 in_slot = (slot_all == s)
 
                 def compute(s=s, in_slot=in_slot):
                     p_s = jax.tree.map(lambda a: a[s], hist)
-                    states = FUSED.layer_norm_states(p_s, cfg.prune_block)
-                    keeps = FUSED.layer_keeps(states, rho_sel)
-                    g, l = FUSED.fused_fleet_grads(
-                        p_s, x, y, keeps, w_merge * in_slot,
-                        cfg.prune_block, impl=_kernel_impl(cfg))
-                    return g, jnp.where(in_slot, l, 0.0).astype(x.dtype)
+                    prep = task.kernel_prepare(p_s)
+                    g, l = task.kernel_grads(p_s, prep, batch, rho_sel,
+                                             w_merge * in_slot,
+                                             impl=_kernel_impl(cfg))
+                    return g, jnp.where(in_slot, l, 0.0).astype(ldtype)
 
                 shapes = jax.eval_shape(compute)
                 g_s, l_s = jax.lax.cond(
                     jnp.any(in_slot), compute,
                     lambda: jax.tree.map(
                         lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes))
-                g_wsum = jax.tree.map(jnp.add, g_wsum, g_s)
+                g_wsum = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_wsum, g_s)
                 losses = losses + l_s
         w_sum = jnp.sum(w_merge)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
@@ -597,7 +691,8 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             lambda a: jax.lax.dynamic_index_in_dim(a, head, 0,
                                                    keepdims=False), hist)
         new_params = jax.tree.map(
-            lambda p, g: jnp.where(w_sum > 0, p - cfg.lr * g / denom, p),
+            lambda p, g: jnp.where(
+                w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
             params, g_wsum)
         version2 = version + 1
         head2 = (head + 1) % hist_len
@@ -622,14 +717,12 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             coh > 0,
             st.m_cell[:, None] * k_all * (q_eff + k_all * st.rho) * st.sched,
             0.0))
-        acc = mlp.accuracy(new_params, x_test, y_test)
 
         per_sum2 = st.per_sum + jnp.where(coh > 0, q_eff, 1.0)
         prune_sum2 = st.prune_sum + jnp.where(coh > 0, st.rho * st.sched, 0.0)
 
         metrics = {
             "loss": mean_loss,
-            "accuracy": acc,
             "round_latency": now2 - now,
             "deadline": st.deadline_c,
             "mean_prune": jnp.sum(coh * st.rho * st.sched) / n_sched,
@@ -640,6 +733,7 @@ def _make_async_step(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             "staleness": jnp.mean(tau.astype(jnp.result_type(float))),
             "sim_time": now2,
         }
+        metrics = _merge_eval(metrics, task, state, new_params)
 
         # -- 5. merged clients re-download version2 and start a new cycle
         st2 = _start_state(control(rkey), now2, version2, st, coh, cfg)
@@ -722,14 +816,39 @@ class Simulation:
         )
 
 
+def _build_common(cfg: FleetConfig, mesh=None):
+    """Shared setup of the scan engine and the host-stepped reference path:
+    resolve the task, drop the population, build data/model, and (when the
+    task knows its physical size) override the wireless model bits D_M."""
+    task = resolve_task(cfg)
+    topo = cfg.topology
+    root = jax.random.PRNGKey(cfg.seed)
+    k_pop, k_task, k_init, k_test, k_data, k_rounds = jax.random.split(root, 6)
+
+    pop = TOPO.make_population(k_pop, topo, cfg.wireless.tx_power_ue_w)
+    state = task.build(k_task, k_test)
+    params = task.init_params(k_init)
+
+    mb = task.model_bits(params)
+    if mb is not None:
+        cfg = dataclasses.replace(
+            cfg, wireless=cfg.wireless.replace(model_bits=float(mb)))
+
+    pop = _shard_cells(pop, mesh)
+    keys = jax.random.split(k_rounds, cfg.rounds + 1)
+    return cfg, task, state, params, pop, k_data, keys
+
+
 def build_simulation(cfg: FleetConfig, mesh=None,
                      mode: str = "sync") -> Simulation:
     """Drop the fleet, build the data/model, jit the round/event scan.
 
     Args:
-      cfg: the run configuration (topology, schedule, wireless, solver).
+      cfg: the run configuration (topology, schedule, wireless, solver,
+        task).
       mesh: optional ``launch.mesh`` mesh; the cell axis of every
-        population tensor is placed on its "data" axis.
+        population tensor is placed on its "data" axis and the flat client
+        axis of the gradient batch is constrained to it inside the round.
       mode: ``"sync"`` (FedSGD barrier rounds) or ``"async"`` (FedBuff
         buffered events; see ``FleetConfig.async_config``).
 
@@ -749,25 +868,11 @@ def build_simulation(cfg: FleetConfig, mesh=None,
     if cfg.mask_kind not in ("magnitude", "block"):
         raise ValueError(
             f"mask_kind must be 'magnitude' or 'block', got {cfg.mask_kind!r}")
+    cfg, task, state, params, pop, k_data, keys = _build_common(cfg, mesh)
     topo = cfg.topology
-    root = jax.random.PRNGKey(cfg.seed)
-    k_pop, k_tmpl, k_init, k_test, k_data, k_rounds = jax.random.split(root, 6)
-
-    pop = TOPO.make_population(k_pop, topo, cfg.wireless.tx_power_ue_w)
-    templates = _class_templates(k_tmpl, cfg.num_classes, cfg.feature_dim)
-    params = mlp.init_mlp_classifier(k_init, cfg.feature_dim, cfg.hidden,
-                                     cfg.num_classes)
-
-    ky, kx = jax.random.split(k_test)
-    y_test = jax.random.randint(ky, (cfg.test_samples,), 0, cfg.num_classes)
-    x_test = templates[y_test] + cfg.data_noise * jax.random.normal(
-        kx, (cfg.test_samples, cfg.feature_dim))
-
-    pop = _shard_cells(pop, mesh)
-    keys = jax.random.split(k_rounds, cfg.rounds + 1)
 
     if mode == "sync":
-        round_fn = _make_round_fn(cfg, pop, templates, k_data, x_test, y_test)
+        round_fn = _make_round_fn(cfg, task, state, pop, k_data, mesh=mesh)
         zeros_ci = jnp.zeros(topo.shape)
 
         @jax.jit
@@ -777,8 +882,7 @@ def build_simulation(cfg: FleetConfig, mesh=None,
 
         round_keys = keys[:cfg.rounds]
     else:
-        step_fn = _make_async_step(cfg, pop, templates, k_data, x_test,
-                                   y_test)
+        step_fn = _make_async_step(cfg, task, state, pop, k_data, mesh=mesh)
         control = _make_control_fn(cfg, pop)
         hist_len = cfg.async_config.history_len
 

@@ -1,0 +1,400 @@
+"""FleetTask: the model-pluggable task substrate of the fleet engine.
+
+The paper's trade-off analysis (Thm. 1, Eqs. (5)/(12)) is model-agnostic —
+it prices pruning and packet loss for *any* non-convex local objective —
+but until this module the engine could only simulate one hardcoded
+synthetic MLP.  A ``FleetTask`` bundles everything task-specific behind a
+small protocol so the engine (sync and async), the 5-UE reference path
+(``federated/system.py``) and the fused client-gradient kernels all
+consume the same object:
+
+* ``build(task_key, eval_key)``      — task constants (data tables, test
+  sets) as a pytree the engine closes over;
+* ``init_params(key)``               — the dense global model;
+* ``client_batch(state, key, i)``    — client ``i``'s *fixed* local batch
+  (the FL fixed-local-dataset setting: same draw every round);
+* ``loss(params, batch)``            — per-client training loss;
+* ``eval_metrics(state, params)``    — at least ``{"accuracy": ...}``;
+* ``tile_grid(params)``              — per-leaf block spec for structured
+  pruning (``core.pruning.leaf_blocks``): non-square transformer matrices
+  get their own tile grid instead of one model-wide ``prune_block``;
+* ``model_bits(params)``             — optional physical model size D_M
+  override for the wireless model (upload latency, Eq. (3));
+* ``kernel_prepare`` / ``kernel_grads`` — the fused hot path: once-per-
+  round ranking state + the weighted Eq.-(5) gradient reduction that never
+  materializes the (clients, params) batch.
+
+Three concrete tasks ship here:
+
+* ``SyntheticMLPTask``    — the original engine task, bit-identical to the
+  pre-task engine (default via the ``FleetConfig`` legacy-field shim);
+* ``TransformerTask``     — causal-LM rounds on ``models/model.py`` with a
+  ``smollm-135m``-shaped-down config and ``data/tokens.py`` batches;
+* ``LinearRegressionTask``— least squares with a closed-form optimum, so
+  convergence-rate assertions are *exact* (the error map is linear).
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pruning
+from repro.kernels import fleet_fused as FUSED
+from repro.models import mlp
+
+PyTree = Any
+
+__all__ = [
+    "FleetTask",
+    "SyntheticMLPTask",
+    "TransformerTask",
+    "LinearRegressionTask",
+    "auto_tile_grid",
+    "TASKS",
+    "make_task",
+]
+
+
+def _auto_block(dim: int, target_tiles: int, min_block: int) -> int:
+    """Tile edge giving ~``target_tiles`` tiles along a ``dim``-sized axis."""
+    return max(min_block, -(-dim // target_tiles))
+
+
+def auto_tile_grid(params: PyTree, target_tiles: int = 8,
+                   min_block: int = 4) -> list:
+    """Per-leaf rectangular block specs sized to the leaf's own matrix.
+
+    Every prunable (>= 2-D) leaf gets a ``(bk, bn)`` pair aiming for about
+    ``target_tiles`` tiles per axis of its *last two* dims, so a (50k, d)
+    embedding and a (d, 4d) MLP projection each carry a grid shaped like
+    themselves — the per-layer tile-grid metadata the fused path consumes.
+    Aligned with ``jax.tree_util.tree_flatten(params)`` order.
+    """
+    leaves = jax.tree_util.tree_leaves(params)
+    return [
+        (_auto_block(leaf.shape[-2], target_tiles, min_block),
+         _auto_block(leaf.shape[-1], target_tiles, min_block))
+        if leaf.ndim >= 2 else None
+        for leaf in leaves
+    ]
+
+
+class FleetTask(abc.ABC):
+    """Protocol every fleet-engine task implements (see module docstring).
+
+    Concrete tasks are frozen dataclasses of python scalars — hashable and
+    cheap to close over; all array state lives in the ``build`` output.
+    """
+
+    name: str = "task"
+
+    # -- data / model -------------------------------------------------------
+
+    @abc.abstractmethod
+    def build(self, task_key: jax.Array, eval_key: jax.Array) -> PyTree:
+        """Materialize task constants (templates, pools, test sets)."""
+
+    @abc.abstractmethod
+    def init_params(self, key: jax.Array) -> PyTree:
+        """Initialize the dense global model."""
+
+    @abc.abstractmethod
+    def client_batch(self, state: PyTree, data_key: jax.Array,
+                     client_idx: jnp.ndarray) -> PyTree:
+        """Client ``client_idx``'s fixed local batch (same draw each round)."""
+
+    @abc.abstractmethod
+    def loss(self, params: PyTree, batch: PyTree) -> jnp.ndarray:
+        """Scalar mean training loss of one client's batch."""
+
+    @abc.abstractmethod
+    def eval_metrics(self, state: PyTree, params: PyTree
+                     ) -> dict[str, jnp.ndarray]:
+        """Evaluation metrics; must include ``"accuracy"``."""
+
+    # -- pruning / wireless metadata ----------------------------------------
+
+    # Whether the engine's auto data-cache should materialize every
+    # client's batch at build time.  True for tasks whose client_batch
+    # re-derives data from the PRNG (threefry/erfinv per round is what the
+    # cache amortizes); set False when client_batch is already a cheap
+    # gather from build-time state — caching would only duplicate it.
+    cache_batches: bool = True
+
+    def tile_grid(self, params: PyTree):
+        """Block spec for structured pruning (``pruning.leaf_blocks``)."""
+        return auto_tile_grid(params)
+
+    def model_bits(self, params: PyTree) -> Optional[float]:
+        """Physical model size D_M in bits, or None to keep the configured
+        ``WirelessConfig.model_bits`` (Table-I value)."""
+        return None
+
+    # -- fused client-gradient hot path -------------------------------------
+
+    def kernel_prepare(self, params: PyTree):
+        """Once-per-round ranking state for block masks (one sort per leaf;
+        per-client masks are then one ``searchsorted`` each)."""
+        return pruning.block_norm_state(params, self.tile_grid(params))
+
+    def kernel_grads(self, params: PyTree, prep, batch: PyTree,
+                     rho: jnp.ndarray, weights: jnp.ndarray,
+                     impl: str = "auto") -> tuple[PyTree, jnp.ndarray]:
+        """Weighted Eq.-(5) gradient sum + per-client losses for one chunk
+        of clients.  The generic path streams clients through
+        ``fleet_fused.masked_scan_grads`` (identical math for every
+        ``impl``); tasks with bespoke kernels (the MLP) override this."""
+        del impl
+        keeps = pruning.block_keep(prep, rho)
+        return FUSED.masked_scan_grads(self.loss, params, batch, keeps,
+                                       weights, self.tile_grid(params))
+
+
+# ---------------------------------------------------------------------------
+# Synthetic MLP classification (the original engine task)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticMLPTask(FleetTask):
+    """Per-class Gaussian-template classification on a small MLP.
+
+    Bit-identical to the pre-task fleet engine: same PRNG consumption for
+    templates / params / test set / client batches, same loss, and the
+    same Pallas/XLA fused kernels (``kernels/fleet_fused.py``) on the
+    ``kernel="fused*"`` hot path.
+    """
+
+    feature_dim: int = 32
+    hidden: tuple[int, ...] = (16,)
+    num_classes: int = 4
+    local_batch: int = 8
+    data_noise: float = 0.5
+    test_samples: int = 512
+    prune_block: int = 8
+
+    name: str = "mlp"
+
+    def build(self, task_key, eval_key):
+        templates = jax.random.normal(task_key,
+                                      (self.num_classes, self.feature_dim))
+        ky, kx = jax.random.split(eval_key)
+        y_test = jax.random.randint(ky, (self.test_samples,), 0,
+                                    self.num_classes)
+        x_test = templates[y_test] + self.data_noise * jax.random.normal(
+            kx, (self.test_samples, self.feature_dim))
+        return {"templates": templates, "x_test": x_test, "y_test": y_test}
+
+    def init_params(self, key):
+        return mlp.init_mlp_classifier(key, self.feature_dim, self.hidden,
+                                       self.num_classes)
+
+    def client_batch(self, state, data_key, client_idx):
+        templates = state["templates"]
+        ck = jax.random.fold_in(data_key, client_idx)
+        ky, kx = jax.random.split(ck)
+        y = jax.random.randint(ky, (self.local_batch,), 0,
+                               templates.shape[0])
+        x = templates[y] + self.data_noise * jax.random.normal(
+            kx, (self.local_batch, templates.shape[1]))
+        return {"x": x, "y": y}
+
+    def loss(self, params, batch):
+        return mlp.classifier_loss(params, batch["x"], batch["y"])
+
+    def eval_metrics(self, state, params):
+        return {"accuracy": mlp.accuracy(params, state["x_test"],
+                                         state["y_test"])}
+
+    def tile_grid(self, params):
+        return self.prune_block
+
+    def kernel_prepare(self, params):
+        # layer-ordered states for the layer-structured MLP kernels
+        return FUSED.layer_norm_states(params, self.prune_block)
+
+    def kernel_grads(self, params, prep, batch, rho, weights, impl="auto"):
+        keeps = FUSED.layer_keeps(prep, rho)
+        return FUSED.fused_fleet_grads(params, batch["x"], batch["y"], keeps,
+                                       weights, self.prune_block, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Transformer causal-LM rounds (production-model FL)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _default_arch(arch_name: str):
+    """CPU-sized shape-down of a production arch (vocab further reduced so
+    the synthetic Zipf/Markov stream is non-trivially learnable)."""
+    from repro.configs import get_config
+    cfg = get_config(arch_name).smoke_variant()
+    return cfg.replace(vocab_size=min(cfg.vocab_size, 256))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerTask(FleetTask):
+    """Causal-LM FL rounds on an ``ArchConfig`` model (``models/model.py``).
+
+    Local data is a deterministic pool of ``data/tokens.py`` token batches
+    (Zipf unigram + first-order Markov structure) materialized host-side at
+    build time; client ``i`` owns pool row ``i % pool_clients`` — fixed
+    local datasets, scan-compatible.  The tile grid is per-leaf by default
+    (``auto_tile_grid``): embeddings, attention projections and MLP
+    matrices each prune on a grid shaped like themselves.
+    """
+
+    arch_name: str = "smollm-135m"
+    arch: Optional[Any] = None          # explicit ArchConfig overrides name
+    seq_len: int = 16
+    local_batch: int = 2
+    eval_batch: int = 8
+    pool_clients: int = 32
+    block: Optional[Any] = None         # scalar/pair spec overrides auto grid
+    target_tiles: int = 8
+
+    name: str = "transformer"
+    # client_batch is a pure gather from the build-time pool; the engine
+    # cache would duplicate the pool n/pool_clients times for zero gain
+    cache_batches: bool = False
+
+    def config(self):
+        return self.arch if self.arch is not None \
+            else _default_arch(self.arch_name)
+
+    def build(self, task_key, eval_key):
+        from repro.data.tokens import TokenStream
+        cfg = self.config()
+        seeds = [int(s) for s in np.asarray(
+            jax.random.randint(task_key, (2,), 0, np.iinfo(np.int32).max))]
+        del eval_key  # eval stream is seeded from the same host draw
+        pool = TokenStream(cfg.vocab_size, seed=seeds[0]).sample(
+            self.pool_clients * self.local_batch, self.seq_len)
+        eval_tokens = TokenStream(cfg.vocab_size, seed=seeds[1]).sample(
+            self.eval_batch, self.seq_len)
+        return {
+            "pool": jnp.asarray(pool.reshape(
+                self.pool_clients, self.local_batch, self.seq_len)),
+            "eval_tokens": jnp.asarray(eval_tokens),
+        }
+
+    def init_params(self, key):
+        from repro.models import model as M
+        return M.init_params(self.config(), key)
+
+    def client_batch(self, state, data_key, client_idx):
+        del data_key  # the pool is the fixed dataset; no per-round PRNG
+        return {"tokens": state["pool"][client_idx % self.pool_clients]}
+
+    def loss(self, params, batch):
+        from repro.models import model as M
+        return M.loss_fn(self.config(), params, batch)[0]
+
+    def eval_metrics(self, state, params):
+        from repro.models import model as M
+        tokens = state["eval_tokens"]
+        logits, _ = M.forward(self.config(), params, tokens)
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        acc = jnp.mean((pred == tokens[:, 1:]).astype(jnp.float32))
+        return {"accuracy": acc}
+
+    def tile_grid(self, params):
+        if self.block is not None:
+            return self.block
+        return auto_tile_grid(params, target_tiles=self.target_tiles)
+
+    def model_bits(self, params):
+        return float(sum(leaf.size * leaf.dtype.itemsize * 8
+                         for leaf in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# Linear regression (closed-form optimum -> exact convergence rates)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearRegressionTask(FleetTask):
+    """Least-squares regression y = x W* + b* (+ noise).
+
+    The loss is quadratic, so full-cohort gradient descent contracts the
+    parameter error *linearly*: theta_{t+1} - theta* =
+    (I - lr H)(theta_t - theta*) with H the empirical design covariance —
+    convergence-rate assertions against the closed form are exact to float
+    precision (see ``optimum``).
+    """
+
+    feature_dim: int = 8
+    targets: int = 2
+    local_batch: int = 8
+    noise: float = 0.0
+    test_samples: int = 64
+    prune_block: int = 4
+
+    name: str = "linreg"
+
+    def build(self, task_key, eval_key):
+        kw, kb = jax.random.split(task_key)
+        w_true = jax.random.normal(kw, (self.feature_dim, self.targets))
+        b_true = 0.1 * jax.random.normal(kb, (self.targets,))
+        kx, ke = jax.random.split(eval_key)
+        x_test = jax.random.normal(kx, (self.test_samples, self.feature_dim))
+        y_test = x_test @ w_true + b_true + self.noise * jax.random.normal(
+            ke, (self.test_samples, self.targets))
+        return {"w_true": w_true, "b_true": b_true,
+                "x_test": x_test, "y_test": y_test}
+
+    def init_params(self, key):
+        w = jax.random.normal(key, (self.feature_dim, self.targets)) \
+            * (1.0 / self.feature_dim) ** 0.5
+        return {"linear": {"w": w, "b": jnp.zeros((self.targets,))}}
+
+    def client_batch(self, state, data_key, client_idx):
+        ck = jax.random.fold_in(data_key, client_idx)
+        kx, ke = jax.random.split(ck)
+        x = jax.random.normal(kx, (self.local_batch, self.feature_dim))
+        y = x @ state["w_true"] + state["b_true"] \
+            + self.noise * jax.random.normal(ke,
+                                             (self.local_batch, self.targets))
+        return {"x": x, "y": y}
+
+    def loss(self, params, batch):
+        pred = batch["x"] @ params["linear"]["w"] + params["linear"]["b"]
+        return 0.5 * jnp.mean(jnp.sum((pred - batch["y"]) ** 2, axis=-1))
+
+    def eval_metrics(self, state, params):
+        pred = state["x_test"] @ params["linear"]["w"] + params["linear"]["b"]
+        sse = jnp.sum((pred - state["y_test"]) ** 2)
+        sst = jnp.sum((state["y_test"]
+                       - jnp.mean(state["y_test"], axis=0)) ** 2)
+        return {"accuracy": 1.0 - sse / jnp.maximum(sst, 1e-12)}  # R^2
+
+    def tile_grid(self, params):
+        return self.prune_block
+
+    @staticmethod
+    def optimum(x: jnp.ndarray, y: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Closed-form least-squares (W*, b*) on stacked samples."""
+        a = jnp.concatenate([x, jnp.ones((x.shape[0], 1), x.dtype)], axis=-1)
+        theta, *_ = jnp.linalg.lstsq(a, y)
+        return theta[:-1], theta[-1]
+
+
+TASKS = {
+    "mlp": SyntheticMLPTask,
+    "transformer": TransformerTask,
+    "linreg": LinearRegressionTask,
+}
+
+
+def make_task(name: str, **kw) -> FleetTask:
+    """Build a registered task by name (the CLI's ``--task`` hook)."""
+    if name not in TASKS:
+        raise ValueError(f"unknown task {name!r}; one of {sorted(TASKS)}")
+    return TASKS[name](**kw)

@@ -34,6 +34,13 @@ Three implementations of identical math (equivalence-tested):
 
 ``fused_fleet_grads`` dispatches: Pallas when the backend is TPU,
 XLA otherwise.
+
+The three kernels above are layer-structured (the MLP's ``layer{i}``
+layout).  ``masked_scan_grads`` is the *model-agnostic* sibling used by
+every other ``FleetTask``: clients stream through a ``lax.scan`` whose
+carry is the accumulated weighted gradient sum, with masks expanded from
+the shared ranking state on per-leaf tile grids — same
+never-materialize-the-batch property, arbitrary loss/pytree.
 """
 
 from __future__ import annotations
@@ -396,6 +403,65 @@ def fused_grads_pallas(params: dict, x: jnp.ndarray, y: jnp.ndarray,
         db = outs[2 + 2 * l][0, :bs[l].shape[0]]
         layer_grads.append((dw, db))
     return grads_tree(layer_grads), losses
+
+
+# ---------------------------------------------------------------------------
+# Generic task path: fused Eq.-(5) reduction for arbitrary loss functions
+# ---------------------------------------------------------------------------
+
+def masked_scan_grads(loss_fn, params: PyTree, batch: PyTree,
+                      keeps: Sequence[Optional[jnp.ndarray]],
+                      weights: jnp.ndarray, block
+                      ) -> tuple[PyTree, jnp.ndarray]:
+    """Weighted-sum block-pruned gradients for an arbitrary task.
+
+    The model-agnostic sibling of ``fused_grads_xla``: clients stream one
+    at a time through a ``lax.scan`` whose carry is the *accumulated*
+    weighted gradient sum, so — like the MLP kernels — the
+    ``(clients, params)`` gradient batch is never materialized.  Masks come
+    from the same once-per-round ranking state (``pruning.block_norm_state``
+    + one ``searchsorted`` per client via ``pruning.block_keep``), expanded
+    per leaf on that leaf's own tile grid (``block`` may be a per-leaf
+    list — non-square transformer matrices ride their own grids).
+
+    Args:
+      loss_fn: ``loss_fn(params, batch_i) -> scalar`` per-client loss.
+      params: the dense global model (any pytree).
+      batch: pytree of per-client batches, every leaf leading-dim clients.
+      keeps: per-leaf tile-keep indicators batched over clients
+        (``pruning.block_keep`` output; ``None`` for unprunable leaves).
+      weights: (clients,) Eq.-(5) aggregation weights (zero drops a client).
+      block: block spec the keeps were ranked with (int | pair | per-leaf
+        list, see ``pruning.leaf_blocks``).
+
+    Returns:
+      ``(grad_wsum, losses)`` — params-shaped weighted gradient sum and the
+      per-client (unweighted) training losses.
+    """
+    keep_idx = [i for i, k in enumerate(keeps) if k is not None]
+    keeps_p = tuple(keeps[i] for i in keep_idx)
+    n_leaves = len(keeps)
+
+    def body(acc, xs):
+        batch_i, keeps_i, w_i = xs
+        full = [None] * n_leaves
+        for i, k in zip(keep_idx, keeps_i):
+            full[i] = k
+        masks = pruning.masks_from_keep(params, full, block)
+        pruned = pruning.apply_masks(params, masks)
+        loss, g = jax.value_and_grad(loss_fn)(pruned, batch_i)
+        g = pruning.apply_masks(g, masks)
+        acc = jax.tree.map(lambda a, gi: a + w_i * gi, acc, g)
+        return acc, loss
+
+    # accumulate at >= f32 whatever the param dtype (bf16 sums drift); the
+    # weight dtype participates too (x64 weights promote f32 grads)
+    acc_dtype = jnp.promote_types(weights.dtype, jnp.float32)
+    init = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.promote_types(p.dtype, acc_dtype)),
+        params)
+    g_wsum, losses = jax.lax.scan(body, init, (batch, keeps_p, weights))
+    return g_wsum, losses
 
 
 # ---------------------------------------------------------------------------
