@@ -51,8 +51,10 @@ import numpy as np
 from benchmarks import common
 from repro.fleet import AsyncConfig, FleetConfig, FleetTopology
 from repro.fleet.engine import build_simulation, time_to_loss
+from repro.fleet.topology import GEOMETRIES, make_geometry
 
 JSON_NAME = "BENCH_fleet.json"
+TOPOLOGY_JSON_NAME = "BENCH_fleet_topology.json"
 
 
 def _fleet_shape(clients: int) -> tuple[int, int]:
@@ -199,6 +201,85 @@ def write_json(records: list[dict], path: str | None = None) -> str:
     return path
 
 
+def bench_geometry(clients: int, rounds: int, geometry: str, reuse: int,
+                   target_loss: float = 1.9, seed: int = 0,
+                   repeats: int = 2) -> dict:
+    """Time one cell-geometry arm: the orthogonal baseline or hex cells at
+    a given frequency-reuse factor (smaller reuse = more co-channel
+    interference = more fixed-point work per round *and* worse PER, so
+    both rounds/s and simulated time-to-loss move)."""
+    cells, per_cell = _fleet_shape(clients)
+    geo = None if geometry == "orthogonal" else make_geometry(geometry,
+                                                              reuse=reuse)
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
+        geometry=geo, rounds=rounds, seed=seed,
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+
+    sim = build_simulation(cfg)
+    compile_s, warm, out = _time_simulation(sim, repeats)
+    res = sim.finalize(*out)
+
+    assert np.all(np.isfinite(res.losses)), f"non-finite losses ({geometry})"
+    return {
+        "geometry": geometry,
+        "reuse": reuse if geometry == "hex" else 0,
+        "clients": clients,
+        "cells": cells,
+        "rounds": rounds,
+        "compile_s": compile_s,
+        "run_s": warm,
+        "rounds_per_s": rounds / warm,
+        "sim_s_to_loss": time_to_loss(res, target_loss),
+        "mean_per": float(np.mean(res.mean_per)),
+        "mean_prune": float(np.mean(res.mean_prune)),
+        "final_loss": float(res.losses[-1]),
+    }
+
+
+def run_geometry(clients: int, rounds: int, geometries: list[str],
+                 reuse_factors: list[int], target_loss: float,
+                 repeats: int) -> list[dict]:
+    """The --geometry table: rounds/s + simulated time-to-loss vs reuse
+    factor, orthogonal cells as the uncoupled baseline.  Writes
+    ``fleet_topology_bench.csv`` + ``BENCH_fleet_topology.json``."""
+    header = ["geometry", "reuse", "clients", "cells", "rounds", "compile_s",
+              "run_s", "rounds_per_s", "sim_s_to_loss", "mean_per",
+              "mean_prune", "final_loss"]
+    rows, records = [], []
+    for geometry in geometries:
+        if geometry not in GEOMETRIES:
+            raise ValueError(
+                f"unknown geometry {geometry!r}; one of {sorted(GEOMETRIES)}")
+        sweeps = reuse_factors if geometry == "hex" else [0]
+        for reuse in sweeps:
+            r = bench_geometry(clients, rounds, geometry, reuse,
+                               target_loss=target_loss, repeats=repeats)
+            records.append(r)
+            rows.append([r[h] for h in header])
+            tag = f"hex reuse={reuse}" if geometry == "hex" else "orthogonal"
+            print(f"{tag:>14s} clients={r['clients']:>7d} "
+                  f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
+                  f"{r['rounds_per_s']:8.2f} rounds/s "
+                  f"per={r['mean_per']:.4f} "
+                  f"to_loss<{target_loss}: {r['sim_s_to_loss']:8.1f}s")
+    path = common.write_csv("fleet_topology_bench.csv", header, rows)
+    print(f"wrote {path}")
+    os.makedirs(common.RESULTS_DIR, exist_ok=True)
+    jpath = os.path.join(common.RESULTS_DIR, TOPOLOGY_JSON_NAME)
+    with open(jpath, "w") as f:
+        json.dump({
+            "schema": "fleet_topology_bench/v1",
+            "created_unix": time.time(),
+            "backend": jax.default_backend(),
+            "cpu_count": os.cpu_count(),
+            "target_loss": target_loss,
+            "results": records,
+        }, f, indent=1)
+    print(f"wrote {jpath}")
+    return records
+
+
 _MAX_COMPARE_EVENTS = 4000
 
 
@@ -277,6 +358,13 @@ def main() -> None:
                          "--json defaults to both)")
     ap.add_argument("--compare", action="store_true",
                     help="sync vs async buffered aggregation comparison")
+    ap.add_argument("--geometry", default=None, metavar="GEOMS",
+                    help="comma-separated cell geometries to benchmark "
+                         "(e.g. 'orthogonal,hex'): rounds/s + simulated "
+                         f"time-to-loss vs reuse factor, written to "
+                         f"{TOPOLOGY_JSON_NAME}")
+    ap.add_argument("--reuse", default="1,3,7",
+                    help="--geometry: comma-separated hex reuse factors")
     ap.add_argument("--buffer", default="0",
                     help="--compare: comma-separated async buffer sizes "
                          "(0 = the 0.25n default; 1 = FedAsync — every "
@@ -298,6 +386,18 @@ def main() -> None:
     json_path = args.json or None
     kernel = args.kernel or ("both" if emit_json else "reference")
     kernels = ["reference", "fused"] if kernel == "both" else [kernel]
+
+    if args.geometry:
+        if args.smoke:
+            clients, rounds = 24, 3
+        else:
+            clients = (1024 if args.clients == "5,100,1000,10000"
+                       else int(args.clients.split(",")[0]))
+            rounds = args.rounds
+        run_geometry(clients, rounds, args.geometry.split(","),
+                     [int(r) for r in args.reuse.split(",")],
+                     args.target_loss, args.repeats)
+        return
 
     if args.compare:
         if args.smoke:

@@ -15,6 +15,10 @@ round-by-round and final summary.
   PYTHONPATH=src python examples/fleet_sim.py --smoke  # CI-sized sanity run
   PYTHONPATH=src python examples/fleet_sim.py --task transformer --smoke \\
       --metrics-out metrics.json  # production-model rounds (FleetTask)
+  PYTHONPATH=src python examples/fleet_sim.py --geometry hex --reuse 1 \\
+      --mobility 25               # hex cells, co-channel SINR, mobility
+  PYTHONPATH=src python examples/fleet_sim.py --cloud-period 5 \\
+      --dirichlet 0.3             # two-tier edge/cloud + non-IID clients
 """
 
 from __future__ import annotations
@@ -27,13 +31,37 @@ import time
 import numpy as np
 
 from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
-                         ScheduleConfig, make_task, run_fleet)
+                         HexInterference, ScheduleConfig, make_task,
+                         run_fleet)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--cells", type=int, default=16)
     ap.add_argument("--per-cell", type=int, default=64)
+    ap.add_argument("--geometry", default="orthogonal",
+                    choices=["orthogonal", "hex"],
+                    help="cell geometry (fleet/topology.py): independent "
+                         "annular cells (the paper's setting) or hex-grid "
+                         "BSs with frequency reuse, co-channel SINR "
+                         "coupling, mobility and handover")
+    ap.add_argument("--reuse", type=int, default=1,
+                    help="hex: frequency reuse factor (1 = every cell "
+                         "co-channel; >= cells = zero interference)")
+    ap.add_argument("--mobility", type=float, default=0.0,
+                    help="hex: per-round client position jitter std (m)")
+    ap.add_argument("--handover-policy", default="serve",
+                    choices=["serve", "exclude"],
+                    help="hex: handed-over clients keep serving via the "
+                         "strongest co-channel BS, or sit the round out")
+    ap.add_argument("--cloud-period", type=int, default=0,
+                    help="two-tier hierarchical aggregation: per-cell edge "
+                         "aggregate every round, backhaul-priced cloud "
+                         "merge every N rounds/events (0 = single-tier)")
+    ap.add_argument("--dirichlet", type=float, default=None, metavar="ALPHA",
+                    help="non-IID clients: Dirichlet(alpha) label skew "
+                         "(mlp) / token-pool skew (transformer); smaller "
+                         "= more skewed")
     ap.add_argument("--task", default="mlp",
                     choices=["mlp", "transformer", "linreg"],
                     help="FleetTask driving the rounds (fleet/task.py): "
@@ -89,27 +117,46 @@ def main() -> None:
             # the transformer smoke is the acceptance run: >= 10 rounds,
             # finite decreasing loss on per-layer tile grids
             args.cells, args.per_cell, args.rounds = 1, 8, 10
+        elif args.geometry == "hex":
+            # enough cells for a real co-channel neighborhood
+            args.cells, args.per_cell, args.rounds = 4, 6, 3
         else:
             args.cells, args.per_cell, args.rounds = 2, 8, 3
 
     kernel = args.kernel or ("reference" if args.task == "mlp" else "fused")
     lr = args.lr if args.lr is not None else \
         {"mlp": 1e-2, "transformer": 0.5, "linreg": 0.1}[args.task]
-    task = None if args.task == "mlp" else make_task(args.task)
+    if args.dirichlet is not None and args.task == "linreg":
+        raise SystemExit("--dirichlet applies to --task mlp (label skew) "
+                         "and transformer (token-pool skew); linreg has no "
+                         "non-IID variant")
+    if args.task == "mlp":
+        task = None
+    else:
+        task_kw = {}
+        if args.dirichlet is not None and args.task == "transformer":
+            task_kw["dirichlet_alpha"] = args.dirichlet
+        task = make_task(args.task, **task_kw)
+    geometry = None if args.geometry == "orthogonal" else HexInterference(
+        reuse=args.reuse, mobility_m=args.mobility)
 
     cfg = FleetConfig(
         topology=FleetTopology(num_cells=args.cells,
                                clients_per_cell=args.per_cell),
+        geometry=geometry,
         schedule=ScheduleConfig(participation=args.participation,
                                 participants_per_cell=args.participants,
                                 straggler_prob=args.stragglers,
-                                round_deadline_s=args.deadline),
+                                round_deadline_s=args.deadline,
+                                handover_policy=args.handover_policy),
         async_config=AsyncConfig(buffer_size=args.buffer,
                                  max_staleness=args.max_staleness,
                                  staleness_discount=args.staleness_discount,
                                  staleness_alpha=args.staleness_alpha),
         weight=args.weight, rounds=args.rounds, seed=args.seed, lr=lr,
-        cell_chunk=args.cell_chunk, kernel=kernel, task=task)
+        cell_chunk=args.cell_chunk, kernel=kernel, task=task,
+        cloud_period=args.cloud_period,
+        dirichlet_alpha=(args.dirichlet if args.task == "mlp" else None))
 
     mesh = None
     if args.mesh:
@@ -119,9 +166,14 @@ def main() -> None:
     mode = "async" if args.async_mode else "sync"
     n = cfg.topology.num_clients
     unit = "events" if mode == "async" else "rounds"
+    geo_tag = "orthogonal" if geometry is None \
+        else f"hex(reuse={args.reuse})"
+    tier_tag = "single-tier" if args.cloud_period == 0 \
+        else f"two-tier(cloud_period={args.cloud_period})"
     print(f"fleet: {args.cells} cells x {args.per_cell} clients = {n} UEs, "
           f"{args.rounds} {unit}, lambda={args.weight}, mode={mode}, "
-          f"task={args.task}, kernel={kernel}")
+          f"task={args.task}, kernel={kernel}, geometry={geo_tag}, "
+          f"{tier_tag}")
     t0 = time.time()
     res = run_fleet(cfg, mesh=mesh, progress=True, mode=mode)
     wall = time.time() - t0

@@ -24,6 +24,7 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = [
+    "uplink_sinr",
     "uplink_rate",
     "downlink_rate",
     "packet_error_rate",
@@ -68,17 +69,42 @@ def _iterate(body, state, n: int, xp, done=None):
 # Rates / PER / latency terms (Eqs. 1-4 + waterfall PER)
 # ---------------------------------------------------------------------------
 
-def uplink_rate(bandwidth, tx_power, h_up, noise_psd, xp=np):
-    """Eq. (3): R_i^u = B_i log2(1 + p_i h_i^u / (B_i N0)); 0 at B_i = 0.
+def uplink_sinr(bandwidth, tx_power, h_up, noise_psd, interference_psd=0.0,
+                xp=np):
+    """Uplink SINR p_i h_i^u / (B_i (N0 + I)); inf at B_i = 0.
+
+    Interference enters exactly as extra noise power spectral density
+    (``interference_psd``, W/Hz — see ``fleet.topology.interference_psd``
+    for the co-channel mean-field model), so every closed form of the
+    orthogonal system generalizes by the substitution N0 -> N0 + I.  With
+    the default ``interference_psd = 0`` this is the paper's Eq.-(3) SNR
+    bit-for-bit.
 
     Units: ``bandwidth`` Hz, ``tx_power`` W, ``h_up`` linear power gain
-    (dimensionless; convert dB as 10^(-dB/10)), ``noise_psd`` W/Hz.
-    Returns the achievable rate in bits/second.
+    (dimensionless; convert dB as 10^(-dB/10)), ``noise_psd`` and
+    ``interference_psd`` W/Hz.  Returns the dimensionless SINR.
     """
     b = _f(bandwidth, xp)
     with np.errstate(divide="ignore", invalid="ignore"):
-        snr = _f(tx_power, xp) * _f(h_up, xp) / (b * noise_psd)
-        r = b * xp.log2(1.0 + snr)
+        sinr = _f(tx_power, xp) * _f(h_up, xp) \
+            / (b * (noise_psd + interference_psd))
+    return xp.where(b > 0.0, sinr, xp.inf)
+
+
+def uplink_rate(bandwidth, tx_power, h_up, noise_psd, interference_psd=0.0,
+                xp=np):
+    """Eq. (3): R_i^u = B_i log2(1 + SINR_i); 0 at B_i = 0.
+
+    Units: ``bandwidth`` Hz, ``tx_power`` W, ``h_up`` linear power gain
+    (dimensionless; convert dB as 10^(-dB/10)), ``noise_psd`` /
+    ``interference_psd`` W/Hz.  Returns the achievable rate in
+    bits/second; interference-free (the default) is the paper's form.
+    """
+    b = _f(bandwidth, xp)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sinr = uplink_sinr(b, tx_power, h_up, noise_psd,
+                           interference_psd=interference_psd, xp=xp)
+        r = b * xp.log2(1.0 + sinr)
     return xp.where(b > 0.0, r, 0.0)
 
 
@@ -92,15 +118,24 @@ def downlink_rate(bandwidth_hz, tx_power_bs, h_down, noise_psd, xp=np):
     return bandwidth_hz * xp.log2(1.0 + snr)
 
 
-def packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0, xp=np):
-    """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)); increasing in B_i (Lemma 1).
+def packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0,
+                      interference_psd=0.0, xp=np):
+    """q_i = 1 - exp(-m0 / SINR_i^hz) with SINR per Hz p h / (B (N0 + I));
+    increasing in B_i (Lemma 1) and in the interference PSD.
 
     Units: ``bandwidth`` Hz, ``tx_power`` W, ``h_up`` linear gain,
-    ``noise_psd`` W/Hz, ``m0`` the dimensionless waterfall threshold;
-    returns a probability in [0, 1).
+    ``noise_psd`` / ``interference_psd`` W/Hz, ``m0`` the dimensionless
+    waterfall threshold; returns a probability in [0, 1).  The
+    interference-free default reduces to the paper's waterfall PER
+    q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)) bit-for-bit.
     """
+    # NOTE: the exponent is spelled -m0 b N_eff / (p h) rather than
+    # -m0 / uplink_sinr so the I = 0 default keeps the paper path's exact
+    # rounding (reciprocal-of-quotient rounds differently) — the bit
+    # compatibility the default-geometry engine trajectories pin.
     b = _f(bandwidth, xp)
-    return 1.0 - xp.exp(-m0 * b * noise_psd / (_f(tx_power, xp) * _f(h_up, xp)))
+    return 1.0 - xp.exp(-m0 * b * (noise_psd + interference_psd)
+                        / (_f(tx_power, xp) * _f(h_up, xp)))
 
 
 def training_latency(prune_rate, num_samples, cycles_per_sample, cpu_hz, xp=np):
@@ -227,7 +262,7 @@ def _batched_searchsorted(sorted_vals, queries, xp):
 # ---------------------------------------------------------------------------
 
 def min_bandwidth_for_rates(target_rate, tx_power, h_up, noise_psd,
-                            iters: int = 80, xp=np, grow_iters: int = 200):
+                            iters: int = 80, xp=np):
     """Invert R^u(B) = target (Lemma 1: R^u is increasing in B).
 
     Solved by safeguarded Newton on f(B) = B ln(1 + c/B) - target ln 2
@@ -235,18 +270,18 @@ def min_bandwidth_for_rates(target_rate, tx_power, h_up, noise_psd,
     positive start the first Newton step lands at-or-below the root and
     the iteration then climbs monotonically with quadratic convergence —
     a handful of log evaluations replaces the former bracket-growth +
-    bisection (which cost ``grow_iters + iters`` rate evaluations per
-    call and dominated the fleet solver's round budget).  ``iters`` caps
-    the Newton count (clamped — quadratic convergence needs far fewer
-    steps than a bisection depth); ``grow_iters`` is accepted for
-    signature compatibility and unused.
+    bisection.  ``iters`` caps the Newton count (clamped — quadratic
+    convergence needs far fewer steps than a bisection depth).
+
+    Interference-aware use: pass ``noise_psd = N0 + I_psd`` — every form
+    here depends on noise only through the effective PSD (see
+    ``uplink_sinr``).
 
     Targets at/above the capacity ceiling p h / (N0 ln 2) return inf.
 
     Units: ``target_rate`` bits/second, ``tx_power`` W, ``h_up`` linear
     gain, ``noise_psd`` W/Hz; returns the minimum bandwidth in Hz.
     """
-    del grow_iters
     target, p, h = xp.broadcast_arrays(_f(target_rate, xp), _f(tx_power, xp),
                                        _f(h_up, xp))
     ceiling = p * h / (noise_psd * _LN2)
@@ -300,8 +335,7 @@ def min_bandwidth_for_rates(target_rate, tx_power, h_up, noise_psd,
 
 def bandwidth_for_deadline(prune, deadline, num_samples, cpu_hz,
                            cycles_per_sample, model_bits, tx_power, h_up,
-                           noise_psd, iters: int = 80, xp=np,
-                           grow_iters: int = 200):
+                           noise_psd, iters: int = 80, xp=np):
     """Eq. (21): per-UE minimum bandwidth meeting the deadline.
 
     ``prune`` may carry leading batch dims (grid search / cells);
@@ -325,8 +359,7 @@ def bandwidth_for_deadline(prune, deadline, num_samples, cpu_hz,
         target = payload / slack
     bw = min_bandwidth_for_rates(
         xp.where((payload > 0) & (slack > 0), target, 0.0),
-        tx_power, h_up, noise_psd, iters=iters, xp=xp,
-        grow_iters=grow_iters)
+        tx_power, h_up, noise_psd, iters=iters, xp=xp)
     bw = xp.where(payload <= 0.0, 0.0, bw)
     return xp.where((payload > 0.0) & (slack <= 0.0), xp.inf, bw)
 

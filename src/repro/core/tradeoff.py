@@ -138,8 +138,9 @@ def prune_rates_for_deadline(t_np: np.ndarray, deadline: float) -> np.ndarray:
     return CF.prune_rates_for_deadline(t_np, deadline, xp=np)
 
 
-def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray
-                  ) -> tuple[float, np.ndarray]:
+def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray,
+                  mask: np.ndarray | None = None,
+                  m: float | None = None) -> tuple[float, np.ndarray]:
     """Proposition 1: closed-form optimal deadline t~* and pruning rates.
 
     The objective g(t~) = (1-lambda) t~ + lambda m sum K_i^2 rho_i^min(t~)
@@ -147,10 +148,16 @@ def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray
     breakpoint t_i^np (ascending) where the slope turns >= 0.  The vertex
     enumeration is the shared ``closed_form.pruning_vertex`` (also the jax
     fleet solver's pruning step).
+
+    ``mask`` restricts the vertex set / slope / rates to the scheduled
+    clients (partial participation); ``m`` overrides the population-level
+    Eq.-(11) coefficient with the scheduled subset's (see
+    ``closed_form.surrogate_m``).
     """
     t_np = prob.no_prune_latency(bandwidth)
-    t_star, rho = CF.pruning_vertex(t_np, prob.num_samples, prob.weight,
-                                    prob.bound.m, prob.max_prune, xp=np)
+    t_star, rho = CF.pruning_vertex(
+        t_np, prob.num_samples, prob.weight,
+        prob.bound.m if m is None else m, prob.max_prune, xp=np, mask=mask)
     return float(t_star), rho
 
 
@@ -197,20 +204,86 @@ def _finish(prob: TradeoffProblem, bandwidth: np.ndarray, prune: np.ndarray,
 
 
 def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
-                      rtol: float = 1e-8) -> TradeoffSolution:
-    """Algorithm 1: equal-split init, then alternate Prop.1 / Eq.(21)."""
-    bandwidth = np.full(prob.num_clients,
-                        prob.cfg.bandwidth_hz / prob.num_clients)
-    prev_cost = np.inf
-    deadline, prune = solve_pruning(prob, bandwidth)
-    for it in range(1, max_iters + 1):
+                      rtol: float = 1e-8,
+                      mask: np.ndarray | None = None,
+                      deadline_cap: float | None = None,
+                      m: float | None = None) -> TradeoffSolution:
+    """Algorithm 1: equal-split init, then alternate Prop.1 / Eq.(21).
+
+    The plain call (``mask``/``deadline_cap``/``m`` all None) is the
+    paper's full-participation solve, unchanged.  The optional arguments
+    are the host port of the fleet solver's scheduling extensions
+    (``fleet.solver.solve_cell``), mirrored step for step so the two
+    paths stay equivalence-testable:
+
+    * ``mask`` — per-client participation; non-participants get
+      rho = B = 0 and leave the vertex walk, the cost and the bandwidth
+      budget split.
+    * ``deadline_cap`` — time-triggered upper bound on t~ (seconds); the
+      Eq.-(16) minimum pruning rates are re-derived at the capped
+      deadline, unschedulable clients (infinite minimum bandwidth even at
+      rho^max) sit out, and — since a binding cap voids Lemma 2's
+      feasibility guarantee — the max-cardinality ascending-demand prefix
+      that fits the budget keeps its allocation.
+    * ``m`` — Eq.-(11) coefficient of the *scheduled subset* (the fleet
+      engine re-derives it per round under partial participation).
+    """
+    if mask is None and deadline_cap is None and m is None:
+        bandwidth = np.full(prob.num_clients,
+                            prob.cfg.bandwidth_hz / prob.num_clients)
+        prev_cost = np.inf
         deadline, prune = solve_pruning(prob, bandwidth)
+        for it in range(1, max_iters + 1):
+            deadline, prune = solve_pruning(prob, bandwidth)
+            bandwidth = solve_bandwidth(prob, prune, deadline)
+            cost = prob.inner_cost(deadline, bandwidth, prune)
+            if abs(prev_cost - cost) <= rtol * max(abs(cost), 1.0):
+                return _finish(prob, bandwidth, prune, deadline, it)
+            prev_cost = cost
+        return _finish(prob, bandwidth, prune, deadline, max_iters)
+
+    msk = np.ones(prob.num_clients) if mask is None \
+        else np.asarray(mask, dtype=np.float64)
+    participating = msk > 0.0
+    m_eff = prob.bound.m if m is None else float(m)
+    k = np.asarray(prob.num_samples, dtype=np.float64)
+    lam = prob.weight
+    b_total = prob.cfg.bandwidth_hz
+
+    def inner_cost(deadline, bw, rho):
+        q = prob.per(bw)
+        learning = m_eff * np.sum(msk * k * (q + k * rho))
+        return float((1.0 - lam) * deadline + lam * learning)
+
+    bandwidth = msk * (b_total / max(float(np.sum(msk)), 1.0))
+    prev_cost = np.inf
+    deadline, prune = solve_pruning(prob, bandwidth, mask=msk, m=m_eff)
+    for it in range(1, max_iters + 1):
+        t_np = prob.no_prune_latency(bandwidth)
+        deadline, prune = solve_pruning(prob, bandwidth, mask=msk, m=m_eff)
+        if deadline_cap is not None:
+            deadline = min(deadline, float(deadline_cap))
+            prune = np.minimum(
+                CF.prune_rates_for_deadline(t_np, deadline, xp=np),
+                prob.max_prune) * msk
         bandwidth = solve_bandwidth(prob, prune, deadline)
-        cost = prob.inner_cost(deadline, bandwidth, prune)
+        if deadline_cap is not None:  # unschedulable at rho^max: sit out
+            bandwidth = np.where(np.isfinite(bandwidth), bandwidth, 0.0)
+            bandwidth = np.where(participating, bandwidth, 0.0)
+            order = np.argsort(bandwidth, kind="stable")
+            fits = np.cumsum(bandwidth[order]) <= b_total * (1.0 + 1e-9)
+            keep = np.zeros_like(bandwidth)
+            keep[order] = fits.astype(bandwidth.dtype)
+            bandwidth = bandwidth * keep
+        bandwidth = np.where(participating, bandwidth, 0.0)
+        cost = inner_cost(deadline, bandwidth, prune)
         if abs(prev_cost - cost) <= rtol * max(abs(cost), 1.0):
-            return _finish(prob, bandwidth, prune, deadline, it)
+            break
         prev_cost = cost
-    return _finish(prob, bandwidth, prune, deadline, max_iters)
+    sol = _finish(prob, bandwidth, prune, deadline, it)
+    sol.per = sol.per * msk
+    sol.inner_cost = cost
+    return sol
 
 
 # ---------------------------------------------------------------------------

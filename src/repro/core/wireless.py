@@ -29,6 +29,7 @@ __all__ = [
     "ClientRadio",
     "Channel",
     "downlink_rate",
+    "uplink_sinr",
     "uplink_rate",
     "packet_error_rate",
     "broadcast_latency",
@@ -60,6 +61,18 @@ class WirelessConfig:
     model_bits: float = 1.6e6               # D_M
     cycles_per_sample: float = 0.168e9      # d^c
     aggregation_latency_s: float = 1e-3     # t^a (constant)
+    # Edge -> cloud backhaul (two-tier hierarchical aggregation, cf.
+    # arXiv:2305.09042): a cloud merge costs model_bits / backhaul_rate
+    # plus the fixed backhaul round-trip latency.  Unused by single-tier
+    # runs (the paper's setting).
+    backhaul_rate_bps: float = 1e9          # edge->cloud link rate
+    backhaul_latency_s: float = 5e-3        # fixed cloud-merge overhead
+
+    @property
+    def backhaul_s(self) -> float:
+        """Latency of one edge->cloud model merge, seconds."""
+        return self.model_bits / self.backhaul_rate_bps \
+            + self.backhaul_latency_s
 
     def replace(self, **kw) -> "WirelessConfig":
         return dataclasses.replace(self, **kw)
@@ -119,19 +132,36 @@ def downlink_rate(cfg: WirelessConfig, h_down: np.ndarray) -> np.ndarray:
                             cfg.noise_psd_w_per_hz, xp=np)
 
 
+def uplink_sinr(bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
+                noise_psd: float, interference_psd=0.0) -> np.ndarray:
+    """Uplink SINR p h / (B (N0 + I)); the paper's SNR at I = 0.
+
+    ``interference_psd`` is the co-channel interference power spectral
+    density in W/Hz (see ``fleet.topology.interference_psd``); it enters
+    every closed form as extra noise PSD.
+    """
+    return CF.uplink_sinr(bandwidth, tx_power, h_up, noise_psd,
+                          interference_psd=interference_psd, xp=np)
+
+
 def uplink_rate(bandwidth: np.ndarray, tx_power: np.ndarray, h_up: np.ndarray,
-                noise_psd: float) -> np.ndarray:
+                noise_psd: float, interference_psd=0.0) -> np.ndarray:
     """Eq. (3): FDMA uplink rate for allocated bandwidth B_i.
 
     Returns 0 for B_i == 0 (the limit of B log2(1+c/B) as B->0 is 0).
+    ``interference_psd`` generalizes to the SINR form (N0 -> N0 + I).
     """
-    return CF.uplink_rate(bandwidth, tx_power, h_up, noise_psd, xp=np)
+    return CF.uplink_rate(bandwidth, tx_power, h_up, noise_psd,
+                          interference_psd=interference_psd, xp=np)
 
 
 def packet_error_rate(bandwidth: np.ndarray, tx_power: np.ndarray,
-                      h_up: np.ndarray, noise_psd: float, m0: float) -> np.ndarray:
-    """q_i = 1 - exp(-m0 B_i N0 / (p_i h_i^u)).  Increasing in B_i (Lemma 1)."""
-    return CF.packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0, xp=np)
+                      h_up: np.ndarray, noise_psd: float, m0: float,
+                      interference_psd=0.0) -> np.ndarray:
+    """q_i = 1 - exp(-m0 B_i (N0 + I) / (p_i h_i^u)).  Increasing in B_i
+    (Lemma 1) and in the co-channel interference PSD ``I``."""
+    return CF.packet_error_rate(bandwidth, tx_power, h_up, noise_psd, m0,
+                                interference_psd=interference_psd, xp=np)
 
 
 def effective_per(per: np.ndarray, retx: int) -> np.ndarray:

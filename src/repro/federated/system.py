@@ -171,16 +171,26 @@ def _host_cell_solver(fcfg, pop):
     latency term is the engine's own code path — only the solver differs,
     and the two solvers agree to 1e-6 (``test_fleet_solver.py``), which is
     what makes whole-trajectory cross-path equivalence meaningful.
+
+    Ports every fleet-solver extension: participation ``mask``, the
+    time-triggered ``deadline_cap``, the per-round scheduled-subset ``m``
+    (all forwarded to ``solve_alternating``), and — when the geometry
+    reports an ``InterferenceGraph`` — the same damped interference fixed
+    point the device solver runs, iterated here in host numpy with
+    identical damping, freeze rule and iteration cap
+    (``fcfg.solver.fp_*``), so fleet-path and host-path trajectories stay
+    comparable with interference enabled.
     """
     from repro.fleet import solver as FSOLVER
 
     k_np = np.asarray(pop.num_samples)
     cpu_np, pw_np = np.asarray(pop.cpu_hz), np.asarray(pop.tx_power)
     mp_np = np.asarray(pop.max_prune)
+    scfg = fcfg.solver
+    n0 = fcfg.wireless.noise_psd_w_per_hz
+    b_hz = fcfg.wireless.bandwidth_hz
 
-    def solve(h_up, mask, m_round, cap):
-        del mask, m_round, cap  # full participation, no deadline (checked)
-        h_up_np = np.asarray(h_up)
+    def solve_cells(h_up_np, mask_np, m_np, cap_np, i_psd):
         cells = h_up_np.shape[0]
         prune = np.zeros_like(h_up_np)
         bandwidth = np.zeros_like(h_up_np)
@@ -189,23 +199,70 @@ def _host_cell_solver(fcfg, pop):
         inner = np.zeros(cells)
         for c in range(cells):
             bound = ConvergenceBound(fcfg.smoothness, k_np[c])
+            # interference enters every closed form as extra noise PSD
+            wcfg = fcfg.wireless.replace(
+                noise_psd_w_per_hz=n0 + float(i_psd[c]))
             prob = tradeoff.TradeoffProblem(
-                cfg=fcfg.wireless, bound=bound, h_up=h_up_np[c],
+                cfg=wcfg, bound=bound, h_up=h_up_np[c],
                 h_down=np.ones_like(h_up_np[c]),  # unused by the solver
                 tx_power=pw_np[c], cpu_hz=cpu_np[c],
                 num_samples=k_np[c].astype(np.float64), max_prune=mp_np[c],
                 weight=fcfg.weight, num_rounds=fcfg.rounds)
             sol_c = tradeoff.solve_alternating(
-                prob, max_iters=fcfg.solver.max_iters)
+                prob, max_iters=scfg.max_iters,
+                mask=None if mask_np is None else mask_np[c],
+                deadline_cap=None if cap_np is None else float(cap_np[c]),
+                m=None if m_np is None else float(m_np[c]))
             prune[c], bandwidth[c] = sol_c.prune, sol_c.bandwidth
             per[c], deadline[c] = sol_c.per, sol_c.deadline
             inner[c] = sol_c.inner_cost
+        return prune, bandwidth, per, deadline, inner
+
+    def solve(h_up, mask, m_round, cap, interference=None):
+        h_up_np = np.asarray(h_up)
+        mask_np = np.asarray(mask) if mask is not None else None
+        m_np = np.asarray(m_round) if m_round is not None else None
+        cap_np = np.asarray(cap) if cap is not None else None
+        cells = h_up_np.shape[0]
+
+        if interference is None:
+            out = solve_cells(h_up_np, mask_np, m_np, cap_np,
+                              np.zeros(cells))
+            i_solved, fp_it = None, None
+        else:
+            # the device fixed point, step for step, in host numpy
+            nbr_idx = np.asarray(interference.nbr_idx)
+            nbr_mask = np.asarray(interference.nbr_mask)
+            cross = np.asarray(interference.cross_gain)
+            i_cur = np.zeros(cells)
+            i_solved = i_cur
+            fp_it = 0
+            for _ in range(scfg.fp_iters):
+                out = solve_cells(h_up_np, mask_np, m_np, cap_np, i_cur)
+                bw = out[1]
+                contrib = (pw_np * bw)[nbr_idx]
+                i_raw = np.sum(contrib * cross * nbr_mask[..., None],
+                               axis=(-2, -1)) / (b_hz * b_hz)
+                i_new = i_cur + scfg.fp_damping * (i_raw - i_cur)
+                err = np.max(np.abs(i_new - i_cur))
+                scale = n0 + np.max(i_cur)
+                i_solved = i_cur
+                i_cur = i_new
+                fp_it += 1
+                if err <= scfg.fp_rtol * scale:
+                    break
+
+        prune, bandwidth, per, deadline, inner = out
         return FSOLVER.CellSolution(
             prune=jnp.asarray(prune), bandwidth=jnp.asarray(bandwidth),
             deadline=jnp.asarray(deadline), per=jnp.asarray(per),
             inner_cost=jnp.asarray(inner),
             iterations=jnp.zeros(cells, jnp.int32),
-            feasible=jnp.ones(cells, bool))
+            feasible=jnp.ones(cells, bool),
+            interference_psd=(None if i_solved is None
+                              else jnp.asarray(i_solved)),
+            fp_iterations=(None if fp_it is None
+                           else jnp.asarray(fp_it, jnp.int32)))
 
     return solve
 
@@ -219,15 +276,19 @@ def run_fleet_reference(fcfg, progress: bool = False):
     plugged in as its ``solve_fn``, and the update half is the engine's
     ``_make_apply_round_fn``.  The loop lives in python — one jitted
     program per round, not one scan per run.  Returns a ``FleetResult``.
-    Sync / full participation / no deadline only (the host solver has no
-    participation-mask or deadline-cap port).
+
+    Covers the fleet solver's full scheduling surface — partial
+    participation, straggler churn, time-triggered deadline caps — and
+    interference-coupled geometries (the host solver runs the same damped
+    fixed point; see ``_host_cell_solver``).  Sync single-tier only: the
+    two-tier edge/cloud mode has no host-stepped twin.
     """
     from repro.fleet import engine as FE
 
-    if fcfg.schedule.participation != "full" or fcfg.schedule.has_deadline:
+    if fcfg.cloud_period >= 1:
         raise NotImplementedError(
-            "run_fleet_reference supports full participation without a "
-            "round deadline (the host solver has no mask/cap port)")
+            "run_fleet_reference is single-tier; two-tier aggregation "
+            "(cloud_period >= 1) only exists on the fleet engine path")
     cfg2, task, state, params, pop, k_data, keys = FE._build_common(fcfg)
     control = FE._make_control_fn(cfg2, pop,
                                   solve_fn=_host_cell_solver(cfg2, pop))

@@ -1,20 +1,28 @@
 """Fleet-scale FL simulation engine.
 
-Scales the paper's 5-UE Table-I system to 10k-1M clients: batched
-multi-cell channel generation (`topology`), the closed-form trade-off
-solver vmapped over cells on-device (`solver`), partial participation /
-stragglers / round deadlines / async arrival times (`scheduler`), and the
-full round compiled as a single `jax.lax.scan` with no host round-trips
-(`engine`).  Two aggregation modes: the paper's synchronous FedSGD barrier
-(default) and FedBuff-style buffered aggregation with staleness-discounted
-merging (``run_fleet(..., mode="async")``, configured by ``AsyncConfig``).
+Scales the paper's 5-UE Table-I system to 10k-1M clients: pluggable cell
+geometry and batched multi-cell channel generation (`topology` —
+orthogonal cells by default, or ``HexInterference`` hex cells with
+frequency reuse, co-channel SINR, mobility and handover), the closed-form
+trade-off solver vmapped over cells on-device with a damped inter-cell
+interference fixed point (`solver`), partial participation / stragglers /
+round deadlines / handover policies / async arrival times (`scheduler`),
+and the full round compiled as a single `jax.lax.scan` with no host
+round-trips (`engine`).  Aggregation modes: the paper's synchronous
+FedSGD barrier (default), FedBuff-style buffered aggregation with
+staleness-discounted merging (``run_fleet(..., mode="async")``,
+configured by ``AsyncConfig``), and — orthogonal to both — two-tier
+edge/cloud hierarchical aggregation (``FleetConfig(cloud_period=n)``).
 """
 
 from repro.fleet.engine import (  # noqa: F401
-    FleetConfig, FleetResult, build_simulation, resolve_task, run, run_fleet,
-    time_to_loss)
+    FleetConfig, FleetResult, build_simulation, resolve_geometry,
+    resolve_task, run, run_fleet, time_to_loss)
 from repro.fleet.scheduler import AsyncConfig, ScheduleConfig  # noqa: F401
+from repro.fleet.solver import SolverConfig  # noqa: F401
 from repro.fleet.task import (  # noqa: F401
     FleetTask, LinearRegressionTask, SyntheticMLPTask, TransformerTask,
     make_task)
-from repro.fleet.topology import FleetTopology  # noqa: F401
+from repro.fleet.topology import (  # noqa: F401
+    CellGeometry, FleetTopology, HexInterference, OrthogonalCells,
+    make_geometry)

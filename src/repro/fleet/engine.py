@@ -1,12 +1,22 @@
 """Scan-compiled fleet rounds: channel -> solver -> FedSGD -> aggregation.
 
-One FL round is: sample fading for every client, draw the participation
-schedule, run the closed-form trade-off solver per cell (Prop. 1 +
-Eq. (21), all on-device), train masked local models (magnitude pruning at
-each client's rho_i*), lose packets at the solved PER, aggregate Eq. (5),
-and track latency / convergence-bound statistics.  The entire ``rounds``
-loop compiles as a single ``jax.lax.scan`` — zero host round-trips, which
-is what lets 10k-1M-client runs approach hardware speed.
+One FL round is: realize the channel through the configured cell geometry
+(``fleet/topology.py``: orthogonal annular cells, or hex cells with
+frequency reuse, co-channel SINR coupling, mobility and handover), draw
+the participation schedule, run the closed-form trade-off solver per cell
+(Prop. 1 + Eq. (21), all on-device — under interference the per-cell
+solves iterate inside the solver's damped fixed point), train masked
+local models (magnitude pruning at each client's rho_i*), lose packets at
+the solved PER, aggregate Eq. (5), and track latency /
+convergence-bound statistics.  The entire ``rounds`` loop compiles as a
+single ``jax.lax.scan`` — zero host round-trips, which is what lets
+10k-1M-client runs approach hardware speed.
+
+Aggregation is single-tier by default (every round is a global merge);
+``FleetConfig(cloud_period=n)`` switches on the two-tier hierarchy of
+arXiv:2305.09042 — per-cell *edge* models aggregate their own clients
+every round/event and a backhaul-priced *cloud* merge reconciles the
+edges every n rounds/events (sync and async, both kernels).
 
 Two aggregation modes share the per-round control path (``_round_control``):
 
@@ -91,6 +101,12 @@ class FleetConfig:
 
     topology: TOPO.FleetTopology = dataclasses.field(
         default_factory=TOPO.FleetTopology)
+    # Cell geometry (placement + inter-cell coupling): None resolves to
+    # TOPO.OrthogonalCells() — the pre-geometry engine, bit-identical.
+    # TOPO.HexInterference(...) switches on hex placement, frequency
+    # reuse, co-channel SINR coupling (the solver then runs its damped
+    # interference fixed point inside the scan), mobility and handover.
+    geometry: Optional[TOPO.CellGeometry] = None
     schedule: SCHED.ScheduleConfig = dataclasses.field(
         default_factory=SCHED.ScheduleConfig)
     async_config: SCHED.AsyncConfig = dataclasses.field(
@@ -142,6 +158,20 @@ class FleetConfig:
     # unless the per-client batches would exceed ~512 MB (the 1M-client
     # regime keeps the streaming regeneration).
     cache_data: Optional[bool] = None
+    # Two-tier hierarchical aggregation (cf. arXiv:2305.09042): 0 (the
+    # default) is the paper's single-tier global step.  n >= 1 keeps a
+    # per-cell *edge* model that aggregates its own clients every round
+    # (sync) / event (async) and merges into the cloud model every n
+    # rounds/events, priced at the wireless backhaul
+    # (WirelessConfig.backhaul_s).  cloud_period = 1 merges every round —
+    # numerically the single-tier rule (within summation-order float
+    # noise), which is what pins the implementation.
+    cloud_period: int = 0
+    # Non-IID client data: Dirichlet concentration of the per-client
+    # label / token-pool skew inside the default SyntheticMLPTask (None =
+    # IID, bit-identical draws).  Explicit tasks carry their own
+    # dirichlet_alpha field; setting both is an error.
+    dirichlet_alpha: Optional[float] = None
 
 
 _LEGACY_TASK_FIELDS = ("feature_dim", "hidden", "num_classes", "local_batch",
@@ -157,6 +187,12 @@ def resolve_task(cfg: FleetConfig) -> TASK.FleetTask:
     the shim, but new code should pass ``task=SyntheticMLPTask(...)``.
     """
     if cfg.task is not None:
+        if cfg.dirichlet_alpha is not None:
+            raise ValueError(
+                "FleetConfig.dirichlet_alpha only applies to the default "
+                "SyntheticMLPTask; set dirichlet_alpha on the explicit "
+                "task instead (both SyntheticMLPTask and TransformerTask "
+                "carry the field).")
         return cfg.task
     defaults = {f.name: f.default for f in dataclasses.fields(FleetConfig)}
 
@@ -174,7 +210,12 @@ def resolve_task(cfg: FleetConfig) -> TASK.FleetTask:
         feature_dim=cfg.feature_dim, hidden=tuple(cfg.hidden),
         num_classes=cfg.num_classes, local_batch=cfg.local_batch,
         data_noise=cfg.data_noise, test_samples=cfg.test_samples,
-        prune_block=cfg.prune_block)
+        prune_block=cfg.prune_block, dirichlet_alpha=cfg.dirichlet_alpha)
+
+
+def resolve_geometry(cfg: FleetConfig) -> TOPO.CellGeometry:
+    """The run's cell geometry: ``cfg.geometry`` or orthogonal cells."""
+    return cfg.geometry if cfg.geometry is not None else TOPO.OrthogonalCells()
 
 
 @dataclasses.dataclass
@@ -242,14 +283,14 @@ def _make_batch_fn(task: TASK.FleetTask, state: PyTree, cfg: FleetConfig,
 
 
 def _client_grad(task: TASK.FleetTask, params: PyTree, rho_i: jnp.ndarray,
-                 batch: PyTree, cfg: FleetConfig
+                 batch: PyTree, cfg: FleetConfig, mask_kind: str = None
                  ) -> tuple[jnp.ndarray, PyTree]:
     """Masked local gradient: rho-level masks, grad at the pruned point,
     gradient re-masked (exactly the 5-client path's client_grad).  The
-    mask rule follows ``cfg.mask_kind``: unstructured magnitude pruning
-    (paper-style) or block-norm threshold masks on the task's tile grid
-    (the fused kernel's)."""
-    if cfg.mask_kind == "block":
+    mask rule follows ``mask_kind`` (default ``cfg.mask_kind``):
+    unstructured magnitude pruning (paper-style) or block-norm threshold
+    masks on the task's tile grid (the fused kernel's)."""
+    if (mask_kind or cfg.mask_kind) == "block":
         masks = pruning.block_masks(params, rho_i,
                                     block=task.tile_grid(params))
     else:
@@ -395,25 +436,36 @@ class RoundControl(NamedTuple):
 def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
                      solve_fn=None):
     """Build the per-key control pass shared by the sync round and the
-    async start/restart: fading -> schedule -> solver -> latency -> packet
+    async start/restart: channel -> schedule -> solver -> latency -> packet
     draws.  Both modes consume keys in the same order, which is what makes
     the buffer-equals-cohort async run reproduce sync draws exactly.
 
-    ``solve_fn(h_up, mask, m_round, cap) -> CellSolution`` swaps the
-    on-device vmapped solver for another implementation — the 5-UE host
-    reference path (``federated/system.py``) plugs the numpy
-    ``solve_alternating`` in here, so *every* draw and latency term stays
-    this one code path and the cross-path equivalence can only be broken
-    by the solvers themselves.
+    The channel realization comes from the configured ``CellGeometry``
+    (``cfg.geometry``); when it reports an interference graph the solver
+    runs its damped SINR fixed point (still inside this one traced
+    function — the engine stays a single scan) and the realized uplink
+    latencies price the converged interference PSD.
+
+    ``solve_fn(h_up, mask, m_round, cap, interference) -> CellSolution``
+    swaps the on-device vmapped solver for another implementation — the
+    5-UE host reference path (``federated/system.py``) plugs the numpy
+    ``solve_alternating`` (with its own host-side fixed point) in here, so
+    *every* draw and latency term stays this one code path and the
+    cross-path equivalence can only be broken by the solvers themselves.
     """
     w = cfg.wireless
     n0, b_hz = w.noise_psd_w_per_hz, w.bandwidth_hz
+    geo = resolve_geometry(cfg)
 
     def control(rkey: jax.Array) -> RoundControl:
         k_fade, k_part, k_strag, k_arr = jax.random.split(rkey, 4)
 
-        h_up, h_down = TOPO.sample_fading(k_fade, pop.pathloss)
+        chan = geo.round_channel(k_fade, pop, cfg.topology)
+        h_up, h_down = chan.h_up, chan.h_down
         mask = SCHED.participation_mask(k_part, cfg.schedule, pop.num_samples)
+        ho = SCHED.handover_mask(chan.served_home, cfg.schedule)
+        if ho is not None:
+            mask = mask * ho
         # The round's Eq.-(11) surrogate coefficient is the *scheduled*
         # subset's: under partial participation each cell's one-round
         # subproblem is over the drawn clients, not the full census.
@@ -440,14 +492,19 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
                 noise_psd=n0, waterfall_m0=w.waterfall_m0,
                 model_bits=w.model_bits,
                 cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
-                solver=cfg.solver)
+                solver=cfg.solver, interference=chan.interference)
         else:
-            sol = solve_fn(h_up, mask, m_round, cap)
+            sol = solve_fn(h_up, mask, m_round, cap, chan.interference)
 
-        # Realized per-client latency (Eq. 4 terms, broadcast over cells).
+        # Realized per-client latency (Eq. 4 terms, broadcast over cells);
+        # with interference the realized uplink rate prices the solver's
+        # converged co-channel PSD (SINR, not SNR).
+        i_psd = 0.0 if sol.interference_psd is None \
+            else sol.interference_psd[:, None]
         t_c = CF.training_latency(sol.prune, pop.num_samples,
                                   w.cycles_per_sample, pop.cpu_hz, xp=jnp)
-        r_u = CF.uplink_rate(sol.bandwidth, pop.tx_power, h_up, n0, xp=jnp)
+        r_u = CF.uplink_rate(sol.bandwidth, pop.tx_power, h_up, n0,
+                             interference_psd=i_psd, xp=jnp)
         t_u = CF.upload_latency(sol.prune, w.model_bits, r_u, xp=jnp)
         t_client = t_d + t_c + t_u
 
@@ -476,6 +533,47 @@ def _merge_eval(metrics: dict, task: TASK.FleetTask, state: PyTree,
     return metrics
 
 
+def _round_activity(cfg: FleetConfig, pop: TOPO.ClientPopulation,
+                    ctl: RoundControl):
+    """(active, arrivals, agg_w) masks of a sync round/edge round: who was
+    scheduled, survived churn, beat the deadline, and landed a packet."""
+    w = cfg.wireless
+    on_time = SCHED.on_time_mask(ctl.t_client + w.aggregation_latency_s,
+                                 cfg.schedule)
+    active = ctl.mask * ctl.strag * on_time
+    arrivals = ctl.arrivals * active
+    return active, arrivals, pop.num_samples * arrivals        # K_i C_i
+
+
+def _round_metrics(cfg: FleetConfig, pop: TOPO.ClientPopulation,
+                   ctl: RoundControl, active, arrivals, mean_loss):
+    """The sync round's metric dict (minus task eval) + the q_eff field.
+
+    The effective loss prob folds scheduling, stragglers and deadline
+    misses into q — the Theorem-1 view of partial participation."""
+    w = cfg.wireless
+    mask, sol, t_client = ctl.mask, ctl.sol, ctl.t_client
+    makespan = jnp.max(jnp.where(mask > 0, t_client, -jnp.inf), axis=-1) \
+        + w.aggregation_latency_s
+    round_lat = jnp.max(SCHED.clamp_round_latency(makespan, cfg.schedule))
+    n_sched = jnp.maximum(jnp.sum(mask), 1.0)
+    q_eff = 1.0 - active * (1.0 - sol.per)
+    k_all = pop.num_samples
+    learning = jnp.sum(
+        ctl.m_round[:, None] * k_all * (q_eff + k_all * sol.prune) * mask)
+    metrics = {
+        "loss": mean_loss,
+        "round_latency": round_lat,
+        "deadline": sol.deadline,
+        "mean_prune": jnp.sum(sol.prune * mask) / n_sched,
+        "mean_per": jnp.sum(q_eff * mask) / n_sched,
+        "participants": jnp.sum(arrivals),
+        "bandwidth_util": jnp.sum(sol.bandwidth, axis=-1) / w.bandwidth_hz,
+        "learning_cost": learning,
+    }
+    return metrics, q_eff
+
+
 def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
                          state: PyTree, pop: TOPO.ClientPopulation,
                          batch_fn, data, mesh=None):
@@ -483,18 +581,11 @@ def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
     (from the scan's on-device solver *or* a host-side reference solver —
     how ``federated/system.py`` reuses this) and produce the FedSGD update
     plus metrics."""
-    w = cfg.wireless
-    b_hz = w.bandwidth_hz
 
     def apply_round(carry, ctl: RoundControl):
         params, per_sum, prune_sum = carry
-        mask, sol, t_client = ctl.mask, ctl.sol, ctl.t_client
-
-        on_time = SCHED.on_time_mask(t_client + w.aggregation_latency_s,
-                                     cfg.schedule)
-        active = mask * ctl.strag * on_time
-        arrivals = ctl.arrivals * active
-        agg_w = pop.num_samples * arrivals                      # K_i C_i
+        mask, sol = ctl.mask, ctl.sol
+        active, arrivals, agg_w = _round_activity(cfg, pop, ctl)
 
         g_wsum, w_sum, mean_loss = _fleet_grads(
             task, params, sol.prune, agg_w, mask, batch_fn, cfg, data=data,
@@ -505,28 +596,8 @@ def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
                 w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
             params, g_wsum)
 
-        # Metrics + bound statistics (effective loss prob folds scheduling,
-        # stragglers and deadline misses into q — the Theorem-1 view of
-        # partial participation).
-        makespan = jnp.max(jnp.where(mask > 0, t_client, -jnp.inf), axis=-1) \
-            + w.aggregation_latency_s
-        round_lat = jnp.max(SCHED.clamp_round_latency(makespan, cfg.schedule))
-        n_sched = jnp.maximum(jnp.sum(mask), 1.0)
-        q_eff = 1.0 - active * (1.0 - sol.per)
-        k_all = pop.num_samples
-        learning = jnp.sum(
-            ctl.m_round[:, None] * k_all * (q_eff + k_all * sol.prune) * mask)
-
-        metrics = {
-            "loss": mean_loss,
-            "round_latency": round_lat,
-            "deadline": sol.deadline,
-            "mean_prune": jnp.sum(sol.prune * mask) / n_sched,
-            "mean_per": jnp.sum(q_eff * mask) / n_sched,
-            "participants": jnp.sum(arrivals),
-            "bandwidth_util": jnp.sum(sol.bandwidth, axis=-1) / b_hz,
-            "learning_cost": learning,
-        }
+        metrics, q_eff = _round_metrics(cfg, pop, ctl, active, arrivals,
+                                        mean_loss)
         metrics = _merge_eval(metrics, task, state, new_params)
         return (new_params, per_sum + q_eff, prune_sum + sol.prune * mask), \
             metrics
@@ -544,6 +615,132 @@ def _make_round_fn(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
 
     def round_fn(carry, rkey):
         return apply_round(carry, control(rkey))
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# Two-tier hierarchical aggregation (edge per cell, periodic cloud merge)
+# ---------------------------------------------------------------------------
+
+def _cloud_view(edge: PyTree, acc_w: jnp.ndarray,
+                k_cell: jnp.ndarray) -> PyTree:
+    """Weighted mean of the per-cell edge models — the Eq.-(5) rule one
+    tier up (reuses ``core.aggregation.aggregate`` so the merge rule stays
+    the shared, equivalence-tested implementation).
+
+    Each cell weighs in with the Eq.-(5) weight mass it actually merged
+    since the last cloud sync (``acc_w``); with ``cloud_period = 1`` the
+    merged cloud model is then *algebraically* the single-tier global
+    update — the degeneracy that pins the implementation.  A period with
+    no arrivals anywhere falls back to the static per-cell sample totals
+    (an unweighted data-size mean of unchanged edges).
+    """
+    w = jnp.where(jnp.sum(acc_w) > 0, acc_w, k_cell)
+    return AGG.aggregate(edge, w, jnp.ones_like(w))
+
+
+def _cell_grad_step(task: TASK.FleetTask, cfg: FleetConfig, params_c: PyTree,
+                    rho_c, agg_w_c, sched_w_c, batch_c):
+    """One cell's weighted gradient sums *at that cell's edge params*.
+
+    The per-cell analogue of ``_fleet_grads``'s chunk step: the reference
+    path vmaps per-client AD, the fused path runs the task's streaming
+    kernel with the cell's own ranking state — both kernels drive the
+    edge tier.
+    """
+    if cfg.kernel == "reference":
+        losses, grads = jax.vmap(
+            lambda b, ri: _client_grad(task, params_c, ri, b, cfg)
+        )(batch_c, rho_c)
+        g = jax.tree.map(
+            lambda gg: jnp.einsum("c,c...->...", agg_w_c, gg), grads)
+    else:
+        prep = task.kernel_prepare(params_c)
+        g, losses = task.kernel_grads(params_c, prep, batch_c, rho_c,
+                                      agg_w_c, impl=_kernel_impl(cfg))
+    return (g, jnp.sum(agg_w_c), jnp.sum(losses * sched_w_c),
+            jnp.sum(sched_w_c))
+
+
+def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
+                            state: PyTree, pop: TOPO.ClientPopulation,
+                            data_key: jax.Array, mesh=None):
+    """Sync two-tier round: per-cell edge FedSGD every round, cloud merge
+    every ``cfg.cloud_period`` rounds (cf. arXiv:2305.09042).
+
+    Each cell's BS holds an *edge* model theta_c; every round its own
+    scheduled clients train against theta_c (per-cell Eq.-(5) weights) and
+    the edge steps locally.  On merge rounds the cloud averages the edge
+    models (``_cloud_view``), broadcasts the result back, and the round
+    pays the backhaul latency (``WirelessConfig.backhaul_s``).  Metrics
+    evaluate the *cloud view* — the weighted edge mean — every round so
+    sync/two-tier loss trajectories share one definition.
+
+    The scan consumes ``(round_key, round_index)`` pairs; the gradient
+    pass is a ``lax.scan`` over cells (each cell needs its own params, so
+    the flat-client chunking — and the mesh client-axis sharding — of the
+    single-tier path does not apply).
+    """
+    if mesh is not None:
+        warnings.warn(
+            "two-tier aggregation (cloud_period >= 1) runs the gradient "
+            "pass as a per-cell scan and does not shard client work over "
+            "the mesh; the mesh placement of population tensors still "
+            "applies but per-round compute stays serial over cells.",
+            stacklevel=3)
+    control = _make_control_fn(cfg, pop)
+    batch_fn, data = _make_batch_fn(task, state, cfg, data_key)
+    w = cfg.wireless
+    c, i = cfg.topology.shape
+    k_cell = jnp.sum(pop.num_samples, axis=-1)                  # (C,)
+    idx = jnp.arange(c * i, dtype=jnp.int32).reshape((c, i))
+    data_leaves, data_def = (jax.tree_util.tree_flatten(data)
+                             if data is not None else ([], None))
+    data_cells = [a.reshape((c, i) + a.shape[1:]) for a in data_leaves]
+
+    def cell_body(_, inp):
+        theta_c, idx_c, rho_c, aggw_c, schedw_c = inp[:5]
+        extra = inp[5:]
+        if extra:
+            batch_c = jax.tree_util.tree_unflatten(data_def, list(extra))
+        else:
+            batch_c = batch_fn(idx_c)
+        g, wsum, lsum, lw = _cell_grad_step(task, cfg, theta_c, rho_c,
+                                            aggw_c, schedw_c, batch_c)
+        denom = jnp.where(wsum > 0, wsum, 1.0)
+        theta2 = jax.tree.map(
+            lambda p, gg: jnp.where(
+                wsum > 0, (p - cfg.lr * gg / denom).astype(p.dtype), p),
+            theta_c, g)
+        return None, (theta2, wsum, lsum, lw)
+
+    def round_fn(carry, xs):
+        rkey, ridx = xs
+        edge, acc_w, per_sum, prune_sum = carry
+        ctl = control(rkey)
+        active, arrivals, agg_w = _round_activity(cfg, pop, ctl)
+
+        _, (edge2, wsums, lsums, lws) = jax.lax.scan(
+            cell_body, None,
+            (edge, idx, ctl.sol.prune, agg_w, ctl.mask, *data_cells))
+        mean_loss = jnp.sum(lsums) / jnp.maximum(jnp.sum(lws), 1.0)
+
+        acc2 = acc_w + wsums
+        cloud = _cloud_view(edge2, acc2, k_cell)
+        do_merge = (ridx % cfg.cloud_period) == (cfg.cloud_period - 1)
+        edge3 = jax.tree.map(
+            lambda e, cl: jnp.where(do_merge, jnp.broadcast_to(
+                cl, e.shape).astype(e.dtype), e), edge2, cloud)
+        acc3 = jnp.where(do_merge, jnp.zeros_like(acc2), acc2)
+
+        metrics, q_eff = _round_metrics(cfg, pop, ctl, active, arrivals,
+                                        mean_loss)
+        metrics["round_latency"] = metrics["round_latency"] \
+            + jnp.where(do_merge, w.backhaul_s, 0.0)
+        metrics = _merge_eval(metrics, task, state, cloud)
+        return (edge3, acc3, per_sum + q_eff,
+                prune_sum + ctl.sol.prune * ctl.mask), metrics
 
     return round_fn
 
@@ -613,21 +810,40 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
                      mesh=None):
     """One server event: fill the buffer with the K earliest arrivals,
     merge them (staleness-discounted) against the param ring buffer, bump
-    the version, restart the merged clients with a fresh control draw."""
+    the version, restart the merged clients with a fresh control draw.
+
+    Two-tier (``cfg.cloud_period >= 1``): the buffered updates merge into
+    each contributor's *home-cell edge model* (per-cell Eq.-(5) weights
+    via one segment-sum) instead of the global model; every
+    ``cloud_period`` events the cloud averages the edges, pays the
+    backhaul latency, and pushes the merged model into the ring buffer —
+    clients always download (and compute stale gradients against) *cloud*
+    checkpoints, so the ring-buffer staleness machinery is unchanged.
+    Per-client gradients are explicit here (the buffer bounds their
+    memory); with a fused kernel configured they use the same block-norm
+    threshold masks the kernel applies, so fused-config trajectories stay
+    mask-rule-consistent across tiers.
+    """
     acfg = cfg.async_config
     w = cfg.wireless
     n = cfg.topology.num_clients
+    c_cells, i_per_cell = cfg.topology.shape
+    two_tier = cfg.cloud_period >= 1
     k_buf = acfg.cohort_buffer(n)
     hist_len = acfg.history_len
     control = _make_control_fn(cfg, pop)
     batch_fn, _ = _make_batch_fn(task, state, cfg, data_key)
     k_flat = pop.num_samples.reshape(-1)
+    k_cell = jnp.sum(pop.num_samples, axis=-1)
 
     def gather(a: jnp.ndarray, sel: jnp.ndarray) -> jnp.ndarray:
         return a.reshape(-1)[sel]
 
     def step(carry, rkey):
-        hist, head, version, now, st = carry
+        if two_tier:
+            hist, head, version, now, st, edge, acc_w = carry
+        else:
+            hist, head, version, now, st = carry
 
         # -- 1. the buffer fills with the K earliest pending arrivals
         sel, t_fill = SCHED.select_arrivals(st.ready, k_buf)
@@ -645,17 +861,23 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
         # -- 3. gradients at each client's *download* version (ring buffer)
         ldtype = jnp.result_type(float)
         batch = _constrain_clients(batch_fn(sel), mesh)
-        if cfg.kernel == "reference":
+        if cfg.kernel == "reference" or two_tier:
+            # under a fused-kernel config the per-client grads here use the
+            # kernel's block-norm threshold masks, not magnitude masks
+            mk = None if cfg.kernel == "reference" else "block"
+
             def one(b_i, rho_i, tau_i):
                 slot = (head - jnp.clip(tau_i, 0, hist_len - 1)) % hist_len
                 stale_params = jax.tree.map(
                     lambda a: jax.lax.dynamic_index_in_dim(
                         a, slot, 0, keepdims=False), hist)
-                return _client_grad(task, stale_params, rho_i, b_i, cfg)
+                return _client_grad(task, stale_params, rho_i, b_i, cfg,
+                                    mask_kind=mk)
 
             losses, grads = jax.vmap(one)(batch, gather(st.rho, sel), tau)
-            g_wsum = jax.tree.map(
-                lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
+            if not two_tier:  # two-tier merges per cell from `grads` below
+                g_wsum = jax.tree.map(
+                    lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
         else:
             # Fused path: bucket the buffer by ring slot (= param version)
             # so each populated slot streams through the fused kernel
@@ -690,10 +912,42 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
         params = jax.tree.map(
             lambda a: jax.lax.dynamic_index_in_dim(a, head, 0,
                                                    keepdims=False), hist)
-        new_params = jax.tree.map(
-            lambda p, g: jnp.where(
-                w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
-            params, g_wsum)
+        if two_tier:
+            # merge the buffered updates into their home-cell edge models
+            # (per-cell Eq.-(5) weights, one segment-sum per leaf)
+            cell_id = sel // i_per_cell
+            den = jax.ops.segment_sum(w_merge, cell_id,
+                                      num_segments=c_cells)       # (C,)
+
+            def edge_update(e, g):
+                shape = (-1,) + (1,) * (g.ndim - 1)
+                num = jax.ops.segment_sum(w_merge.reshape(shape) * g,
+                                          cell_id, num_segments=c_cells)
+                d = jnp.maximum(den, 1e-30).reshape(shape)
+                return jnp.where((den > 0).reshape(shape),
+                                 (e - cfg.lr * num / d).astype(e.dtype), e)
+
+            edge2 = jax.tree.map(edge_update, edge, grads)
+            acc2 = acc_w + den
+            cloud = _cloud_view(edge2, acc2, k_cell)
+            do_merge = ((version + 1) % cfg.cloud_period) == 0
+            acc_out = jnp.where(do_merge, jnp.zeros_like(acc2), acc2)
+            edge_out = jax.tree.map(
+                lambda e, cl: jnp.where(do_merge, jnp.broadcast_to(
+                    cl, e.shape).astype(e.dtype), e), edge2, cloud)
+            # clients only ever download cloud checkpoints: the ring
+            # buffer re-pins the current checkpoint between merges
+            new_params = jax.tree.map(
+                lambda p, cl: jnp.where(do_merge, cl.astype(p.dtype), p),
+                params, cloud)
+            eval_params = cloud
+            now2 = now2 + jnp.where(do_merge, w.backhaul_s, 0.0)
+        else:
+            new_params = jax.tree.map(
+                lambda p, g: jnp.where(
+                    w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
+                params, g_wsum)
+            eval_params = new_params
         version2 = version + 1
         head2 = (head + 1) % hist_len
         hist2 = jax.tree.map(
@@ -733,11 +987,14 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
             "staleness": jnp.mean(tau.astype(jnp.result_type(float))),
             "sim_time": now2,
         }
-        metrics = _merge_eval(metrics, task, state, new_params)
+        metrics = _merge_eval(metrics, task, state, eval_params)
 
         # -- 5. merged clients re-download version2 and start a new cycle
         st2 = _start_state(control(rkey), now2, version2, st, coh, cfg)
         st2 = st2._replace(per_sum=per_sum2, prune_sum=prune_sum2)
+        if two_tier:
+            return (hist2, head2, version2, now2, st2, edge_out,
+                    acc_out), metrics
         return (hist2, head2, version2, now2, st2), metrics
 
     return step
@@ -773,19 +1030,48 @@ class Simulation:
     round_keys: jnp.ndarray
     num_samples: jnp.ndarray
     mode: str = "sync"
+    two_tier: bool = False
+
+    def _edge_mean(self, edge: PyTree, acc_w: np.ndarray) -> PyTree:
+        """Host-side cloud view: merged-weight-mass mean of the edges
+        (falling back to sample totals when nothing merged since the last
+        cloud sync — matching ``_cloud_view``)."""
+        acc_w = np.asarray(acc_w, dtype=np.float64)
+        if acc_w.sum() <= 0:
+            acc_w = np.sum(np.asarray(self.num_samples, dtype=np.float64),
+                           axis=-1)
+        w = acc_w / acc_w.sum()
+
+        def mean(a):
+            a = np.asarray(a)
+            return np.tensordot(w.astype(a.dtype), a, axes=1)
+
+        return jax.tree.map(mean, edge)
 
     def finalize(self, carry, metrics) -> FleetResult:
         """Convert the scan output (device arrays) into a host FleetResult,
-        including the Theorem-1 bound on the realized (q, rho) averages."""
+        including the Theorem-1 bound on the realized (q, rho) averages.
+
+        Two-tier carries hold per-cell edge models; the returned ``params``
+        is the cloud view (weighted edge mean — equal to the last cloud
+        merge when the final round merged)."""
         cfg = self.cfg
         if self.mode == "async":
-            hist, head, _, _, st = carry
-            params = jax.tree.map(
-                lambda a: np.asarray(a)[int(head)], hist)
+            if self.two_tier:
+                hist, head, _, _, st, edge, acc_w = carry
+                params = self._edge_mean(edge, acc_w)
+            else:
+                hist, head, _, _, st = carry
+                params = jax.tree.map(
+                    lambda a: np.asarray(a)[int(head)], hist)
             per_sum, prune_sum = st.per_sum, st.prune_sum
         else:
-            params, per_sum, prune_sum = carry
-            params = jax.tree.map(np.asarray, params)
+            if self.two_tier:
+                edge, acc_w, per_sum, prune_sum = carry
+                params = self._edge_mean(edge, acc_w)
+            else:
+                params, per_sum, prune_sum = carry
+                params = jax.tree.map(np.asarray, params)
         avg_per = np.asarray(per_sum).reshape(-1) / cfg.rounds
         avg_prune = np.asarray(prune_sum).reshape(-1) / cfg.rounds
         bound = ConvergenceBound(cfg.smoothness,
@@ -821,11 +1107,12 @@ def _build_common(cfg: FleetConfig, mesh=None):
     resolve the task, drop the population, build data/model, and (when the
     task knows its physical size) override the wireless model bits D_M."""
     task = resolve_task(cfg)
+    geo = resolve_geometry(cfg)
     topo = cfg.topology
     root = jax.random.PRNGKey(cfg.seed)
     k_pop, k_task, k_init, k_test, k_data, k_rounds = jax.random.split(root, 6)
 
-    pop = TOPO.make_population(k_pop, topo, cfg.wireless.tx_power_ue_w)
+    pop = geo.make_population(k_pop, topo, cfg.wireless.tx_power_ue_w)
     state = task.build(k_task, k_test)
     params = task.init_params(k_init)
 
@@ -868,17 +1155,38 @@ def build_simulation(cfg: FleetConfig, mesh=None,
     if cfg.mask_kind not in ("magnitude", "block"):
         raise ValueError(
             f"mask_kind must be 'magnitude' or 'block', got {cfg.mask_kind!r}")
+    if cfg.cloud_period < 0:
+        raise ValueError(
+            f"cloud_period must be >= 0 (0 = single-tier), got "
+            f"{cfg.cloud_period}")
     cfg, task, state, params, pop, k_data, keys = _build_common(cfg, mesh)
     topo = cfg.topology
+    two_tier = cfg.cloud_period >= 1
 
     if mode == "sync":
-        round_fn = _make_round_fn(cfg, task, state, pop, k_data, mesh=mesh)
         zeros_ci = jnp.zeros(topo.shape)
+        if two_tier:
+            round_fn = _make_two_tier_round_fn(cfg, task, state, pop, k_data,
+                                               mesh=mesh)
+            steps = jnp.arange(cfg.rounds, dtype=jnp.int32)
 
-        @jax.jit
-        def simulate(params, round_keys):
-            return jax.lax.scan(round_fn, (params, zeros_ci, zeros_ci),
-                                round_keys)
+            @jax.jit
+            def simulate(params, round_keys):
+                edge0 = jax.tree.map(
+                    lambda p: jnp.repeat(p[None], topo.num_cells, axis=0),
+                    params)
+                acc0 = jnp.zeros((topo.num_cells,))
+                return jax.lax.scan(round_fn,
+                                    (edge0, acc0, zeros_ci, zeros_ci),
+                                    (round_keys, steps))
+        else:
+            round_fn = _make_round_fn(cfg, task, state, pop, k_data,
+                                      mesh=mesh)
+
+            @jax.jit
+            def simulate(params, round_keys):
+                return jax.lax.scan(round_fn, (params, zeros_ci, zeros_ci),
+                                    round_keys)
 
         round_keys = keys[:cfg.rounds]
     else:
@@ -897,13 +1205,18 @@ def build_simulation(cfg: FleetConfig, mesh=None,
                                     a.dtype).at[0].set(a), params)
             carry0 = (hist0, jnp.asarray(0, jnp.int32),
                       jnp.asarray(0, jnp.int32), jnp.zeros(()), st0)
+            if two_tier:
+                edge0 = jax.tree.map(
+                    lambda p: jnp.repeat(p[None], topo.num_cells, axis=0),
+                    params)
+                carry0 = carry0 + (edge0, jnp.zeros((topo.num_cells,)))
             return jax.lax.scan(step_fn, carry0, round_keys[1:])
 
         round_keys = keys
 
     return Simulation(cfg=cfg, simulate=simulate, params=params,
                       round_keys=round_keys, num_samples=pop.num_samples,
-                      mode=mode)
+                      mode=mode, two_tier=two_tier)
 
 
 def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False,

@@ -43,6 +43,21 @@ class ScheduleConfig:
     participants_per_cell: int = 0      # m per cell (<=0 or >=I: everyone)
     straggler_prob: float = 0.0         # i.i.d. post-solve dropout
     round_deadline_s: float = math.inf  # hard per-round wall-clock cutoff
+    # Handover policy for geometries that reattach clients to the
+    # strongest co-channel BS (``topology.HexInterference``):
+    #   "serve"   — the handed-over client stays scheduled in its home
+    #               cell's allocation at its serving-BS gain (reattachment
+    #               within the reuse group is frequency-transparent);
+    #   "exclude" — the client sits the round out (models the handover
+    #               interruption gap); it re-enters when its home BS is
+    #               strongest again.
+    handover_policy: str = "serve"
+
+    def __post_init__(self):
+        if self.handover_policy not in ("serve", "exclude"):
+            raise ValueError(
+                f"handover_policy must be 'serve' or 'exclude', got "
+                f"{self.handover_policy!r}")
 
     @property
     def has_deadline(self) -> bool:
@@ -111,6 +126,19 @@ def participation_mask(key: jax.Array, sched: ScheduleConfig,
     z = logits + jax.random.gumbel(key, shape)
     rank = jnp.argsort(jnp.argsort(-z, axis=-1), axis=-1)
     return (rank < m).astype(jnp.result_type(float))
+
+
+def handover_mask(served_home, sched: ScheduleConfig):
+    """(C, I) participation factor from this round's handover state.
+
+    ``served_home`` is ``RoundChannel.served_home`` (1.0 where the
+    strongest candidate BS is the home BS; ``None`` for geometries without
+    handover).  Returns ``None`` when the mask is a no-op — the engine
+    then skips the multiply, keeping the orthogonal path bit-identical.
+    """
+    if served_home is None or sched.handover_policy == "serve":
+        return None
+    return served_home
 
 
 def straggler_mask(key: jax.Array, sched: ScheduleConfig,

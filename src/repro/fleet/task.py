@@ -178,6 +178,12 @@ class SyntheticMLPTask(FleetTask):
     data_noise: float = 0.5
     test_samples: int = 512
     prune_block: int = 8
+    # Non-IID label skew (cf. the fedPrune ``--distribution dirichlet``
+    # idiom): each client draws a fixed class distribution
+    # p_i ~ Dirichlet(alpha * 1) and samples its labels from it — small
+    # alpha concentrates each client on a few classes.  None = IID
+    # (uniform labels, bit-identical to the pre-Dirichlet task).
+    dirichlet_alpha: Optional[float] = None
 
     name: str = "mlp"
 
@@ -199,8 +205,15 @@ class SyntheticMLPTask(FleetTask):
         templates = state["templates"]
         ck = jax.random.fold_in(data_key, client_idx)
         ky, kx = jax.random.split(ck)
-        y = jax.random.randint(ky, (self.local_batch,), 0,
-                               templates.shape[0])
+        if self.dirichlet_alpha is None:
+            y = jax.random.randint(ky, (self.local_batch,), 0,
+                                   templates.shape[0])
+        else:
+            kp, kc = jax.random.split(ky)
+            p = jax.random.dirichlet(
+                kp, jnp.full((templates.shape[0],), self.dirichlet_alpha))
+            y = jax.random.categorical(kc, jnp.log(p),
+                                       shape=(self.local_batch,))
         x = templates[y] + self.data_noise * jax.random.normal(
             kx, (self.local_batch, templates.shape[1]))
         return {"x": x, "y": y}
@@ -258,11 +271,22 @@ class TransformerTask(FleetTask):
     pool_clients: int = 32
     block: Optional[Any] = None         # scalar/pair spec overrides auto grid
     target_tiles: int = 8
+    # Non-IID token-pool skew: each client draws a fixed distribution
+    # p_i ~ Dirichlet(alpha * 1) over the pool rows and fills its batch
+    # from rows sampled by p_i — small alpha gives each client a few
+    # dominant text sources.  None = the IID round-robin gather
+    # (bit-identical to the pre-Dirichlet task).
+    dirichlet_alpha: Optional[float] = None
 
     name: str = "transformer"
-    # client_batch is a pure gather from the build-time pool; the engine
-    # cache would duplicate the pool n/pool_clients times for zero gain
-    cache_batches: bool = False
+
+    @property
+    def cache_batches(self) -> bool:
+        # The IID client_batch is a pure gather from the build-time pool —
+        # the engine cache would duplicate it n/pool_clients times for
+        # zero gain.  The Dirichlet variant re-derives its row draws from
+        # the PRNG, which the cache amortizes.
+        return self.dirichlet_alpha is not None
 
     def config(self):
         return self.arch if self.arch is not None \
@@ -289,8 +313,18 @@ class TransformerTask(FleetTask):
         return M.init_params(self.config(), key)
 
     def client_batch(self, state, data_key, client_idx):
-        del data_key  # the pool is the fixed dataset; no per-round PRNG
-        return {"tokens": state["pool"][client_idx % self.pool_clients]}
+        if self.dirichlet_alpha is None:
+            # the pool is the fixed dataset; no per-round PRNG
+            return {"tokens": state["pool"][client_idx % self.pool_clients]}
+        ck = jax.random.fold_in(data_key, client_idx)
+        kp, kr, ks = jax.random.split(ck, 3)
+        p = jax.random.dirichlet(
+            kp, jnp.full((self.pool_clients,), self.dirichlet_alpha))
+        rows = jax.random.categorical(kr, jnp.log(p),
+                                      shape=(self.local_batch,))
+        seq = jax.random.randint(ks, (self.local_batch,), 0,
+                                 self.local_batch)
+        return {"tokens": state["pool"][rows, seq]}
 
     def loss(self, params, batch):
         from repro.models import model as M

@@ -1,25 +1,60 @@
-"""Batched multi-cell channel + population generation (pure jax.numpy).
+"""Pluggable cell geometry: placement, channels, and inter-cell coupling.
 
-The fleet analogue of ``core.wireless.Channel``: clients drop uniformly in
-an annulus around their serving BS, path loss follows the same urban model
-128.1 + 37.6 log10(d_km) dB, and small-scale fading is i.i.d. Rayleigh
-(exponential power gains) re-drawn every round.  Everything is shaped
+The fleet analogue of ``core.wireless.Channel``, generalized behind the
+``CellGeometry`` protocol.  A geometry owns everything spatial: where base
+stations sit, where clients drop, how serving gains are drawn each round,
+and — when cells are not orthogonal — which neighbor cells leak co-channel
+interference into each uplink.  Everything stays shaped
 ``(num_cells, clients_per_cell)`` so one ``vmap``/``scan`` covers the whole
-fleet — there is no per-client Python anywhere.
+fleet; there is no per-client Python anywhere.
 
-Each cell is an independent instance of the paper's single-BS problem
-(its own bandwidth budget B); cross-cell coupling happens only at the
-global aggregation step in the engine (hierarchical-FL backhaul view, cf.
-arXiv:2305.09042).
+Two geometries ship:
+
+* ``OrthogonalCells`` (default) — the original model: clients drop
+  uniformly in an annulus around their serving BS, path loss follows the
+  urban model 128.1 + 37.6 log10(d_km) dB, small-scale fading is i.i.d.
+  Rayleigh (exponential power gains) re-drawn every round, and each cell
+  is an independent instance of the paper's single-BS problem (its own
+  bandwidth budget B).  Bit-compatible with the pre-geometry engine: the
+  PRNG consumption is identical.
+* ``HexInterference`` — real 2D placement: BSs sit on a hexagonal grid,
+  clients drop around their home BS (same radial draw as
+  ``OrthogonalCells``, which is what makes the zero-interference limit
+  exact), cells are colored into frequency-reuse groups, and each uplink
+  sees the summed co-channel interference of its nearest same-group
+  neighbor cells (the hierarchical-wireless setting of arXiv:2305.09042).
+  Optional per-round mobility jitters client positions, and handover
+  reattaches each client to the strongest co-channel BS.
+
+Interference model (mean-field over sub-band placement): client j of a
+co-channel cell transmits power p_j over bandwidth B_j out of the shared
+band B; averaged over independent uniform sub-band placement and Rayleigh
+fading (mean 1), it raises the interference power spectral density at a
+victim BS with cross gain g_j by ``p_j g_j B_j / B^2`` — its received
+power spread over the band, weighted by its band occupancy B_j / B.  The
+total extra PSD adds to N0 in every rate/PER closed form
+(``core.closed_form.uplink_sinr``); ``interference_psd`` computes it from
+an allocated bandwidth field, which is what the solver's damped
+fixed-point iterates (``fleet.solver.solve_fleet``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+# fold_in salts: geometry-specific draws derive from folded keys so the
+# *shared* draws (distances, speeds, dataset sizes, serving fading) stay
+# bit-identical across geometries — the orthogonal limit of
+# HexInterference reproduces OrthogonalCells exactly.
+_SALT_ANGLE = 0x6E0
+_SALT_MOBILITY = 0x6E1
+_SALT_HANDOVER = 0x6E2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +84,32 @@ class FleetTopology:
         return (self.num_cells, self.clients_per_cell)
 
 
+class HexState(NamedTuple):
+    """Static spatial state of a ``HexInterference`` population.
+
+    ``nbr_idx[c, k]`` lists the co-channel cells whose clients interfere
+    into BS ``c`` (the K nearest same-reuse-group cells; padded with ``c``
+    itself under ``nbr_mask = 0``).  ``cross_gain[c, k, i]`` is the linear
+    path gain from client ``i`` of cell ``nbr_idx[c, k]`` to BS ``c``;
+    ``cand_gain[c, i, k]`` is the gain from client ``(c, i)`` to candidate
+    handover BS ``nbr_idx[c, k]``.  Both are fading-averaged (Rayleigh
+    mean 1) path-loss gains, recomputed per round under mobility.
+    """
+
+    bs_pos: jnp.ndarray       # (C, 2) BS coordinates, meters
+    pos: jnp.ndarray          # (C, I, 2) client home positions, meters
+    nbr_idx: jnp.ndarray      # (C, K) co-channel neighbor cell ids
+    nbr_mask: jnp.ndarray     # (C, K) 1.0 real neighbor / 0.0 padding
+    cross_gain: jnp.ndarray   # (C, K, I) client-of-neighbor -> BS c gain
+    cand_gain: jnp.ndarray    # (C, I, K) client -> neighbor-BS gain
+
+
 class ClientPopulation(NamedTuple):
-    """Static per-client state, all shaped (num_cells, clients_per_cell)."""
+    """Static per-client state, all shaped (num_cells, clients_per_cell).
+
+    ``geometry`` carries geometry-specific spatial state (``HexState`` for
+    ``HexInterference``; ``None`` for orthogonal cells).
+    """
 
     dist_m: jnp.ndarray
     pathloss: jnp.ndarray       # linear power gain (no fading)
@@ -58,7 +117,58 @@ class ClientPopulation(NamedTuple):
     num_samples: jnp.ndarray    # K_i (float for weighting math)
     tx_power: jnp.ndarray       # p_i
     max_prune: jnp.ndarray      # rho_i^max
+    geometry: Any = None        # HexState | None
 
+
+class InterferenceGraph(NamedTuple):
+    """Per-round co-channel coupling consumed by the solver's fixed point.
+
+    ``interference_psd(bandwidth * tx_power gathered over nbr_idx)`` turns
+    an allocated-bandwidth field into the per-cell extra noise PSD.
+    """
+
+    cross_gain: jnp.ndarray   # (C, K, I) fading-averaged cross gains
+    nbr_idx: jnp.ndarray      # (C, K)
+    nbr_mask: jnp.ndarray     # (C, K)
+
+
+class RoundChannel(NamedTuple):
+    """One round's channel realization, geometry-agnostic.
+
+    ``served_home`` flags clients whose strongest candidate BS is their
+    home BS this round (always 1 for orthogonal cells); the scheduler's
+    handover policy decides what a 0 means.  ``interference`` is ``None``
+    for orthogonal geometries — the solver then skips the fixed point
+    entirely (bit-compatible fast path).
+    """
+
+    h_up: jnp.ndarray                          # (C, I) serving uplink gain
+    h_down: jnp.ndarray                        # (C, I) downlink gain
+    served_home: Optional[jnp.ndarray] = None  # (C, I) 1.0 = home-served
+    interference: Optional[InterferenceGraph] = None
+
+
+def interference_psd(bandwidth: jnp.ndarray, tx_power: jnp.ndarray,
+                     graph: InterferenceGraph,
+                     bandwidth_hz: float) -> jnp.ndarray:
+    """Per-cell co-channel interference PSD in W/Hz from an allocation.
+
+    Mean-field over sub-band placement: client j of a co-channel neighbor
+    cell contributes ``p_j g_j B_j / B^2`` (received power over the band,
+    weighted by its occupancy B_j / B).  Non-transmitting clients
+    (``B_j = 0``: unscheduled, sidelined, or pruned out of the round)
+    contribute nothing, which is what couples the solver's bandwidth
+    allocation back into every neighbor's SINR.
+    """
+    contrib = (tx_power * bandwidth)[graph.nbr_idx]        # (C, K, I)
+    i_pow = jnp.sum(contrib * graph.cross_gain
+                    * graph.nbr_mask[..., None], axis=(-2, -1))
+    return i_pow / (bandwidth_hz * bandwidth_hz)
+
+
+# ---------------------------------------------------------------------------
+# Shared placement / channel primitives (geometry-independent draws)
+# ---------------------------------------------------------------------------
 
 def drop_clients(key: jax.Array, topo: FleetTopology) -> jnp.ndarray:
     """Client-BS distances, uniform in [min_dist, max_dist] per cell."""
@@ -74,7 +184,12 @@ def path_loss_linear(dist_m: jnp.ndarray) -> jnp.ndarray:
 
 def make_population(key: jax.Array, topo: FleetTopology,
                     tx_power_w: float) -> ClientPopulation:
-    """Drop the fleet: positions, compute speeds, dataset sizes."""
+    """Drop the fleet: positions, compute speeds, dataset sizes.
+
+    The geometry-independent draws (distance to the serving BS, CPU speed,
+    dataset size) — every geometry consumes ``key`` through this one
+    function so the draws agree across geometries.
+    """
     k_drop, k_cpu, k_samp = jax.random.split(key, 3)
     dist = drop_clients(k_drop, topo)
     cpu = jax.random.uniform(k_cpu, topo.shape, minval=topo.cpu_hz_range[0],
@@ -98,3 +213,258 @@ def sample_fading(key: jax.Array, pathloss: jnp.ndarray
     ray_u = jax.random.exponential(k_up, pathloss.shape)
     ray_d = jax.random.exponential(k_down, pathloss.shape)
     return pathloss * ray_u, pathloss * ray_d
+
+
+# ---------------------------------------------------------------------------
+# CellGeometry protocol + the two shipped geometries
+# ---------------------------------------------------------------------------
+
+class CellGeometry:
+    """Protocol every fleet geometry implements.
+
+    Concrete geometries are frozen dataclasses of python scalars (hashable,
+    cheap to close over); all array state lives in the population they
+    build.  ``make_population`` runs eagerly at build time;
+    ``round_channel`` is traced into the round scan and must consume its
+    key the same way for every geometry whose draws are meant to coincide
+    (see the fold-in salts at the top of this module).
+    """
+
+    name: str = "geometry"
+
+    def make_population(self, key: jax.Array, topo: FleetTopology,
+                        tx_power_w: float) -> ClientPopulation:
+        raise NotImplementedError
+
+    def round_channel(self, key: jax.Array, pop: ClientPopulation,
+                      topo: FleetTopology) -> RoundChannel:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class OrthogonalCells(CellGeometry):
+    """Independent annular cells, no inter-cell coupling (the default).
+
+    Exactly the pre-geometry engine's math and PRNG consumption: cells
+    couple only at the aggregation step, never in the channel.
+    """
+
+    name: str = "orthogonal"
+
+    def make_population(self, key, topo, tx_power_w):
+        return make_population(key, topo, tx_power_w)
+
+    def round_channel(self, key, pop, topo):
+        h_up, h_down = sample_fading(key, pop.pathloss)
+        return RoundChannel(h_up=h_up, h_down=h_down)
+
+
+def hex_bs_positions(num_cells: int, spacing_m: float) -> np.ndarray:
+    """Hexagonal-spiral BS layout: (num_cells, 2) coordinates in meters.
+
+    Ring-by-ring spiral around the origin on an axial hex lattice with
+    center-to-center distance ``spacing_m``; also returns nothing else —
+    the axial coordinates used for reuse coloring come from
+    ``_hex_axial``.
+    """
+    axial = _hex_axial(num_cells)
+    q = axial[:, 0].astype(np.float64)
+    r = axial[:, 1].astype(np.float64)
+    return np.stack([spacing_m * (q + 0.5 * r),
+                     spacing_m * (np.sqrt(3.0) / 2.0) * r], axis=-1)
+
+
+def _hex_axial(num_cells: int) -> np.ndarray:
+    """Axial (q, r) coordinates of a hex spiral covering ``num_cells``."""
+    coords = [(0, 0)]
+    dirs = [(-1, 1), (-1, 0), (0, -1), (1, -1), (1, 0), (0, 1)]
+    ring = 0
+    while len(coords) < num_cells:
+        ring += 1
+        q, r = ring, 0
+        for dq, dr in dirs:
+            for _ in range(ring):
+                if len(coords) >= num_cells:
+                    break
+                coords.append((q, r))
+                q, r = q + dq, r + dr
+    return np.asarray(coords[:num_cells], dtype=np.int64)
+
+
+# Proper hex colorings (no same-color adjacent cells) for the standard
+# reuse factors; other factors fall back to shift 2, which may leave some
+# co-channel adjacency (physically permissible: partial isolation).
+_REUSE_SHIFT = {3: 2, 4: 2, 7: 3}
+
+
+def hex_reuse_groups(num_cells: int, reuse: int) -> np.ndarray:
+    """Frequency-reuse group id per cell (0..reuse-1).
+
+    ``reuse >= num_cells`` gives every cell its own group — the
+    zero-co-channel (orthogonal) limit used by the equivalence tests.
+    """
+    if reuse < 1:
+        raise ValueError(f"reuse factor must be >= 1, got {reuse}")
+    if reuse >= num_cells:
+        return np.arange(num_cells, dtype=np.int64)
+    axial = _hex_axial(num_cells)
+    shift = _REUSE_SHIFT.get(reuse, 2)
+    return np.mod(axial[:, 0] + shift * axial[:, 1], reuse)
+
+
+@dataclasses.dataclass(frozen=True)
+class HexInterference(CellGeometry):
+    """Hex-grid cells with frequency reuse, co-channel interference,
+    per-round mobility and strongest-gain handover.
+
+    ``reuse`` colors the grid into frequency groups; cells of the same
+    group share the band and interfere.  ``max_neighbors`` bounds how many
+    nearest co-channel cells couple into each BS (static shapes for the
+    scan).  ``mobility_m`` is the per-round standard deviation of a
+    Gaussian position jitter around each client's home drop (0 = static).
+    With ``handover=True`` a client whose strongest candidate BS (home +
+    co-channel neighbors, instantaneous fading) is not its home BS is
+    reattached: its uplink gain is the strongest-BS gain (reattachment
+    within the reuse group is frequency-transparent) and
+    ``RoundChannel.served_home`` flags it for the scheduler's handover
+    policy.
+
+    The zero-co-channel limit (``reuse >= num_cells``, or a single cell)
+    short-circuits to exactly the ``OrthogonalCells`` channel path: same
+    draws, no interference graph, no fixed point — equivalence is bitwise.
+    """
+
+    reuse: int = 3
+    max_neighbors: int = 6
+    mobility_m: float = 0.0
+    handover: bool = True
+    spacing_factor: float = 2.0   # BS spacing = spacing_factor * max_dist_m
+
+    name: str = "hex"
+
+    def _num_neighbors(self, topo: FleetTopology) -> int:
+        groups = hex_reuse_groups(topo.num_cells, self.reuse)
+        counts = np.bincount(groups, minlength=self.reuse if
+                             self.reuse < topo.num_cells else topo.num_cells)
+        return int(min(self.max_neighbors, max(counts.max() - 1, 0)))
+
+    def make_population(self, key, topo, tx_power_w):
+        pop = make_population(key, topo, tx_power_w)
+        bs_pos = jnp.asarray(hex_bs_positions(
+            topo.num_cells, self.spacing_factor * topo.max_dist_m))
+        # Angle draw from a *folded* key: the radial draws above stay
+        # bit-identical to OrthogonalCells.
+        k_geo = jax.random.fold_in(key, _SALT_ANGLE)
+        theta = jax.random.uniform(k_geo, topo.shape, minval=0.0,
+                                   maxval=2.0 * np.pi)
+        pos = bs_pos[:, None, :] + pop.dist_m[..., None] * jnp.stack(
+            [jnp.cos(theta), jnp.sin(theta)], axis=-1)
+
+        k_nbr = self._num_neighbors(topo)
+        if k_nbr == 0:
+            return pop  # orthogonal limit: no spatial state needed
+        groups = hex_reuse_groups(topo.num_cells, self.reuse)
+        bs_np = np.asarray(bs_pos)
+        d2 = np.sum((bs_np[:, None, :] - bs_np[None, :, :]) ** 2, axis=-1)
+        same = (groups[:, None] == groups[None, :]) \
+            & ~np.eye(topo.num_cells, dtype=bool)
+        d2 = np.where(same, d2, np.inf)
+        order = np.argsort(d2, axis=-1, kind="stable")[:, :k_nbr]
+        mask = np.take_along_axis(np.isfinite(d2), order, axis=-1)
+        nbr_idx = np.where(mask, order, np.arange(topo.num_cells)[:, None])
+        cross, cand = _hex_gains(pos, bs_pos, jnp.asarray(nbr_idx),
+                                 topo.min_dist_m)
+        geo = HexState(bs_pos=bs_pos, pos=pos,
+                       nbr_idx=jnp.asarray(nbr_idx, jnp.int32),
+                       nbr_mask=jnp.asarray(mask, jnp.result_type(float)),
+                       cross_gain=cross, cand_gain=cand)
+        return pop._replace(geometry=geo)
+
+    def round_channel(self, key, pop, topo):
+        geo: Optional[HexState] = pop.geometry
+        if geo is None and self.mobility_m <= 0.0:
+            # zero co-channel neighbors, static clients: exactly orthogonal
+            h_up, h_down = sample_fading(key, pop.pathloss)
+            return RoundChannel(h_up=h_up, h_down=h_down)
+
+        pathloss, cross, cand = pop.pathloss, None, None
+        if geo is not None:
+            cross, cand = geo.cross_gain, geo.cand_gain
+        if self.mobility_m > 0.0:
+            k_mob = jax.random.fold_in(key, _SALT_MOBILITY)
+            bs_pos = geo.bs_pos if geo is not None else jnp.asarray(
+                hex_bs_positions(topo.num_cells,
+                                 self.spacing_factor * topo.max_dist_m))
+            if geo is not None:
+                home = geo.pos
+            else:
+                # No HexState (zero co-channel neighbors): the population
+                # kept only radial distances, so re-derive a position at
+                # angle 0 — the jitter is isotropic either way.
+                home = bs_pos[:, None, :] + jnp.stack(
+                    [pop.dist_m, jnp.zeros_like(pop.dist_m)], axis=-1)
+            pos = home + self.mobility_m * jax.random.normal(
+                k_mob, home.shape)
+            dist = jnp.maximum(jnp.linalg.norm(pos - bs_pos[:, None, :],
+                                               axis=-1), topo.min_dist_m)
+            pathloss = path_loss_linear(dist)
+            if geo is not None:
+                cross, cand = _hex_gains(pos, geo.bs_pos, geo.nbr_idx,
+                                         topo.min_dist_m)
+
+        # Serving-link fading consumes the key exactly like sample_fading.
+        k_up, k_down = jax.random.split(key)
+        ray_u = jax.random.exponential(k_up, pathloss.shape)
+        ray_d = jax.random.exponential(k_down, pathloss.shape)
+        h_home = pathloss * ray_u
+        h_down = pathloss * ray_d
+
+        served_home = None
+        h_up = h_home
+        if self.handover and geo is not None:
+            k_ho = jax.random.fold_in(k_up, _SALT_HANDOVER)
+            ray_nbr = jax.random.exponential(k_ho, cand.shape)  # (C, I, K)
+            cand_inst = cand * ray_nbr * geo.nbr_mask[:, None, :]
+            best_nbr = jnp.max(cand_inst, axis=-1)
+            h_up = jnp.maximum(h_home, best_nbr)
+            served_home = (h_home >= best_nbr).astype(jnp.result_type(float))
+
+        graph = None
+        if geo is not None:
+            graph = InterferenceGraph(cross_gain=cross, nbr_idx=geo.nbr_idx,
+                                      nbr_mask=geo.nbr_mask)
+        return RoundChannel(h_up=h_up, h_down=h_down, served_home=served_home,
+                            interference=graph)
+
+
+def _hex_gains(pos: jnp.ndarray, bs_pos: jnp.ndarray, nbr_idx: jnp.ndarray,
+               min_dist_m: float) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(cross_gain (C,K,I), cand_gain (C,I,K)) from client positions.
+
+    ``cross_gain[c, k, i]``: client i of cell nbr_idx[c, k] -> BS c (the
+    interference path); ``cand_gain[c, i, k]``: client (c, i) -> BS
+    nbr_idx[c, k] (the handover-candidate path).  Distances clip at the
+    annulus minimum so the log-distance path loss stays finite.
+    """
+    nbr_bs = bs_pos[nbr_idx]                               # (C, K, 2)
+    cand_d = jnp.linalg.norm(
+        pos[:, :, None, :] - nbr_bs[:, None, :, :], axis=-1)   # (C, I, K)
+    cross_d = jnp.linalg.norm(
+        pos[nbr_idx] - bs_pos[:, None, None, :], axis=-1)      # (C, K, I)
+    cand = path_loss_linear(jnp.maximum(cand_d, min_dist_m))
+    cross = path_loss_linear(jnp.maximum(cross_d, min_dist_m))
+    return cross, cand
+
+
+GEOMETRIES = {
+    "orthogonal": OrthogonalCells,
+    "hex": HexInterference,
+}
+
+
+def make_geometry(name: str, **kw) -> CellGeometry:
+    """Build a registered geometry by name (the CLI's ``--geometry`` hook)."""
+    if name not in GEOMETRIES:
+        raise ValueError(
+            f"unknown geometry {name!r}; one of {sorted(GEOMETRIES)}")
+    return GEOMETRIES[name](**kw)

@@ -25,7 +25,8 @@ def tiny(rounds=6, **kw):
 def test_population_shapes_and_ranges():
     topo = FleetTopology(num_cells=4, clients_per_cell=16)
     pop = TOPO.make_population(jax.random.PRNGKey(0), topo, 0.2)
-    for leaf in pop:
+    assert pop.geometry is None  # orthogonal default: no spatial state
+    for leaf in jax.tree.leaves(pop):
         assert leaf.shape == (4, 16)
     assert np.all(np.asarray(pop.dist_m) >= topo.min_dist_m)
     assert np.all(np.asarray(pop.dist_m) <= topo.max_dist_m)

@@ -240,15 +240,19 @@ def test_run_any_fleet_path_matches_5ue_path():
     _assert_trees_close(host.params, fleet.params, rtol=1e-5, atol=1e-8)
 
 
-def test_run_fleet_reference_rejects_unsupported_schedules():
+def test_run_fleet_reference_supports_partial_participation():
+    """PR-5: the host solver grew the mask/cap port, so the 5-UE path now
+    steps partial-participation schedules instead of rejecting them (the
+    tight cross-path equivalence lives in test_fleet_topology.py)."""
     from repro.federated import system as SYS
     from repro.fleet import ScheduleConfig
 
     cfg = tiny(rounds=2, task=LinearRegressionTask(),
                schedule=ScheduleConfig(participation="uniform",
                                        participants_per_cell=4))
-    with pytest.raises(NotImplementedError):
-        SYS.run_fleet_reference(cfg)
+    res = SYS.run_fleet_reference(cfg)
+    assert np.all(np.isfinite(res.losses))
+    assert np.all(res.participants <= 4 * cfg.topology.num_cells)
 
 
 # ---------------------------------------------------------------------------
