@@ -1,0 +1,212 @@
+"""Perf-regression guardrail: diff a fresh ``BENCH_fleet.json`` against
+the committed baseline.
+
+Compares every benchmark arm the two documents share — matched on
+``(mode, kernel, clients, buffer)`` — on throughput (``rounds_per_s``,
+which may only drop by ``--rtol``), trajectory quality (``final_loss``,
+which may only worsen by ``--loss-rtol`` relative), and the
+fused-over-reference ``speedups`` per (mode, clients) (``--speedup-rtol``).
+Improvements never fail.  Arms present in only one document are reported
+but don't fail the check (the sweep shape is allowed to grow).
+
+When both documents carry an ``env`` stanza (see
+``fleet_bench.env_metadata``), mismatched fields are printed so hardware
+/ toolchain drift is distinguishable from code drift — an env mismatch
+turns throughput failures into warnings unless ``--strict-env`` is set,
+because rounds/s on different hardware is not a regression signal.
+
+Exit status: 0 = within tolerance, 1 = regression, 2 = unusable inputs.
+
+  PYTHONPATH=src python -m benchmarks.fleet_bench --clients 1000 \
+      --rounds 10 --json fresh.json
+  python -m benchmarks.check_regression fresh.json          # vs committed
+  python -m benchmarks.check_regression fresh.json --baseline other.json
+
+CI runs this warn-only (``continue-on-error``): the bench trajectory is a
+tracked series, not (yet) a merge gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "results",
+                        "BENCH_fleet.json")
+
+# keys that identify "the same arm" across two bench documents
+ARM_KEYS = ("mode", "kernel", "clients", "buffer")
+
+
+def arm_id(record: dict) -> tuple:
+    return tuple(record.get(k) for k in ARM_KEYS)
+
+
+def arm_label(record: dict) -> str:
+    parts = [f"{record.get('mode', '?')}/{record.get('kernel', '?')}"
+             f"@{record.get('clients', '?')}"]
+    if record.get("buffer"):
+        parts.append(f"buf={record['buffer']}")
+    return " ".join(parts)
+
+
+def _index(records: list[dict]) -> dict[tuple, dict]:
+    return {arm_id(r): r for r in records}
+
+
+def compare_env(base: dict, fresh: dict) -> list[str]:
+    """Mismatched env fields of the two documents (empty = same env, or
+    one side predates the env stanza)."""
+    env_b, env_f = base.get("env"), fresh.get("env")
+    if not env_b or not env_f:
+        return []
+    drift = []
+    for k in sorted(set(env_b) | set(env_f)):
+        if env_b.get(k) != env_f.get(k):
+            drift.append(f"{k}: baseline={env_b.get(k)!r} "
+                         f"fresh={env_f.get(k)!r}")
+    return drift
+
+
+def compare(base: dict, fresh: dict, rtol: float = 0.30,
+            loss_rtol: float = 0.05, speedup_rtol: float = 0.35,
+            overhead_max: float = 0.10) -> tuple[list[str], list[str]]:
+    """(failures, notes) of a fresh bench document vs the baseline.
+
+    ``rtol`` bounds the allowed *relative drop* in rounds/s per shared
+    arm; ``loss_rtol`` the allowed relative increase in final loss;
+    ``speedup_rtol`` the allowed relative drop in each shared
+    fused/reference speedup ratio.  ``overhead_max`` caps the telemetry
+    overhead fraction when the fresh document reports one.  Timing
+    tolerances are deliberately loose — shared-CI-runner noise is real —
+    so a failure means "meaningfully slower", not "jittered".
+    """
+    failures, notes = [], []
+    base_arms = _index(base.get("results", []))
+    fresh_arms = _index(fresh.get("results", []))
+
+    shared = sorted(set(base_arms) & set(fresh_arms), key=str)
+    if not shared:
+        failures.append("no shared benchmark arms between baseline and "
+                        "fresh results — nothing comparable")
+        return failures, notes
+    for key in sorted(set(base_arms) - set(fresh_arms), key=str):
+        notes.append(f"baseline-only arm (not re-run): "
+                     f"{arm_label(base_arms[key])}")
+    for key in sorted(set(fresh_arms) - set(base_arms), key=str):
+        notes.append(f"new arm (no baseline): {arm_label(fresh_arms[key])}")
+
+    for key in shared:
+        b, f = base_arms[key], fresh_arms[key]
+        label = arm_label(b)
+
+        rb, rf = b.get("rounds_per_s"), f.get("rounds_per_s")
+        if rb and rf:
+            drop = 1.0 - rf / rb
+            if drop > rtol:
+                failures.append(
+                    f"{label}: rounds/s {rb:.2f} -> {rf:.2f} "
+                    f"({100 * drop:.0f}% drop > {100 * rtol:.0f}% budget)")
+            elif drop > rtol / 2:
+                notes.append(f"{label}: rounds/s {rb:.2f} -> {rf:.2f} "
+                             f"({100 * drop:.0f}% drop, within budget)")
+
+        lb, lf = b.get("final_loss"), f.get("final_loss")
+        if lb is not None and lf is not None and abs(lb) > 0:
+            worse = (lf - lb) / abs(lb)
+            if worse > loss_rtol:
+                failures.append(
+                    f"{label}: final loss {lb:.4f} -> {lf:.4f} "
+                    f"({100 * worse:.1f}% worse > {100 * loss_rtol:.1f}%)")
+
+    base_sp = {(s["mode"], s["clients"]): s["speedup"]
+               for s in base.get("speedups", [])}
+    fresh_sp = {(s["mode"], s["clients"]): s["speedup"]
+                for s in fresh.get("speedups", [])}
+    for key in sorted(set(base_sp) & set(fresh_sp), key=str):
+        sb, sf = base_sp[key], fresh_sp[key]
+        drop = 1.0 - sf / sb
+        if drop > speedup_rtol:
+            failures.append(
+                f"speedup {key[0]}@{key[1]}: {sb:.2f}x -> {sf:.2f}x "
+                f"({100 * drop:.0f}% drop > {100 * speedup_rtol:.0f}%)")
+
+    oh = fresh.get("telemetry_overhead")
+    if oh and oh.get("overhead_frac") is not None:
+        frac = oh["overhead_frac"]
+        if frac > overhead_max:
+            failures.append(
+                f"telemetry overhead {100 * frac:.1f}% > "
+                f"{100 * overhead_max:.0f}% budget "
+                f"({oh['rounds_per_s_off']:.2f} -> "
+                f"{oh['rounds_per_s_on']:.2f} rounds/s "
+                f"@ {oh.get('clients')} clients)")
+        else:
+            notes.append(f"telemetry overhead {100 * frac:+.1f}% "
+                         f"@ {oh.get('clients')} clients (budget "
+                         f"{100 * overhead_max:.0f}%)")
+
+    return failures, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly produced BENCH_fleet.json")
+    ap.add_argument("--baseline", default=BASELINE,
+                    help=f"baseline document (default: {BASELINE})")
+    ap.add_argument("--rtol", type=float, default=0.30,
+                    help="allowed relative rounds/s drop per arm")
+    ap.add_argument("--loss-rtol", type=float, default=0.05,
+                    help="allowed relative final-loss increase per arm")
+    ap.add_argument("--speedup-rtol", type=float, default=0.35,
+                    help="allowed relative fused/reference speedup drop")
+    ap.add_argument("--overhead-max", type=float, default=0.10,
+                    help="max telemetry overhead fraction (rounds/s cost)")
+    ap.add_argument("--strict-env", action="store_true",
+                    help="fail on throughput regressions even when the "
+                         "env stanzas differ (default: demote to warning)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        with open(args.fresh) as fh:
+            fresh = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"cannot load bench documents: {e}", file=sys.stderr)
+        return 2
+
+    drift = compare_env(base, fresh)
+    failures, notes = compare(
+        base, fresh, rtol=args.rtol, loss_rtol=args.loss_rtol,
+        speedup_rtol=args.speedup_rtol, overhead_max=args.overhead_max)
+
+    if drift:
+        print("environment drift (baseline vs fresh):")
+        for line in drift:
+            print(f"  {line}")
+        if not args.strict_env:
+            timing = [f for f in failures
+                      if "rounds/s" in f or f.startswith("speedup")
+                      or "overhead" in f]
+            if timing:
+                print("env differs: demoting timing regressions to "
+                      "warnings (--strict-env to fail):")
+                for f in timing:
+                    print(f"  [env-demoted] {f}")
+            failures = [f for f in failures if f not in timing]
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs {args.baseline}:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"\nOK: no regressions vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

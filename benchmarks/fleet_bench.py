@@ -40,16 +40,19 @@ via the shared benchmark plumbing, and ``BENCH_fleet.json`` with --json.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import math
 import os
+import platform
 import time
 
 import jax
 import numpy as np
 
 from benchmarks import common
-from repro.fleet import AsyncConfig, FleetConfig, FleetTopology
+from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
+                         SpanRecorder, TelemetryConfig)
 from repro.fleet.engine import build_simulation, time_to_loss
 from repro.fleet.topology import GEOMETRIES, make_geometry
 
@@ -68,33 +71,51 @@ def _fleet_shape(clients: int) -> tuple[int, int]:
     return clients // per_cell, per_cell
 
 
-def _time_simulation(sim, repeats: int) -> tuple[float, float, tuple]:
+def _span(recorder: SpanRecorder | None, name: str, **args):
+    """A recorder span, or a no-op when tracing is off (no --trace)."""
+    if recorder is None:
+        return contextlib.nullcontext()
+    return recorder.span(name, **args)
+
+
+def _time_simulation(sim, repeats: int,
+                     recorder: SpanRecorder | None = None
+                     ) -> tuple[float, float, tuple]:
     """(compile seconds, best-of-``repeats`` warm seconds, last scan
     output — for ``finalize``)."""
-    t0 = time.perf_counter()
-    out = sim.simulate(sim.params, sim.round_keys)   # compile + run
-    jax.block_until_ready(out)
-    cold = time.perf_counter() - t0
+    with _span(recorder, "compile+run"):
+        t0 = time.perf_counter()
+        out = sim.simulate(sim.params, sim.round_keys)   # compile + run
+        jax.block_until_ready(out)
+        cold = time.perf_counter() - t0
     warm = math.inf
     for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
-        out = sim.simulate(sim.params, sim.round_keys)
-        jax.block_until_ready(out)
-        warm = min(warm, time.perf_counter() - t0)
+        with _span(recorder, "warm_run"):
+            t0 = time.perf_counter()
+            out = sim.simulate(sim.params, sim.round_keys)
+            jax.block_until_ready(out)
+            warm = min(warm, time.perf_counter() - t0)
     return cold - warm, warm, out
 
 
 def bench_one(clients: int, rounds: int, kernel: str = "reference",
-              seed: int = 0, repeats: int = 2) -> dict:
+              seed: int = 0, repeats: int = 2, telemetry: bool = False,
+              recorder: SpanRecorder | None = None) -> dict:
     cells, per_cell = _fleet_shape(clients)
     cfg = FleetConfig(
         topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
         rounds=rounds, seed=seed, kernel=kernel,
-        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))),
+        telemetry=TelemetryConfig() if telemetry else None)
 
-    sim = build_simulation(cfg)
-    compile_s, warm, out = _time_simulation(sim, repeats)
-    res = sim.finalize(*out)
+    with _span(recorder, "bench_one", clients=clients, kernel=kernel,
+               telemetry=telemetry):
+        with _span(recorder, "build"):
+            sim = build_simulation(cfg)
+        compile_s, warm, out = _time_simulation(sim, repeats,
+                                                recorder=recorder)
+        with _span(recorder, "finalize"):
+            res = sim.finalize(*out)
 
     assert np.all(np.isfinite(res.losses)), "non-finite losses at scale"
     return {
@@ -103,6 +124,7 @@ def bench_one(clients: int, rounds: int, kernel: str = "reference",
         "clients": clients,
         "cells": cells,
         "rounds": rounds,
+        "telemetry": telemetry,
         "compile_s": compile_s,
         "run_s": warm,
         "rounds_per_s": rounds / warm,
@@ -111,11 +133,52 @@ def bench_one(clients: int, rounds: int, kernel: str = "reference",
     }
 
 
+def bench_telemetry_overhead(clients: int, rounds: int, seed: int = 0,
+                             repeats: int = 2,
+                             recorder: SpanRecorder | None = None) -> dict:
+    """rounds/s with ``FleetConfig.telemetry`` off vs on (default
+    ``TelemetryConfig()``), same shape and seed — the observability tax.
+    The stanza rides ``BENCH_fleet.json`` so the regression check can pin
+    it (the acceptance target is <= 10% at the 1024-client shape).
+
+    The two arms are timed *interleaved* (off, on, off, on, ...) with the
+    per-arm best kept: back-to-back sequential timing lets machine-level
+    throughput drift between the windows masquerade as overhead, which at
+    this shape (~10ms/round) is larger than the effect being measured."""
+    repeats = max(repeats, 5)
+    cells, per_cell = _fleet_shape(clients)
+    base_kw = dict(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
+        rounds=rounds, seed=seed,
+        cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
+    sims = [build_simulation(FleetConfig(**base_kw, telemetry=tel))
+            for tel in (None, TelemetryConfig())]
+    best = [math.inf, math.inf]
+    with _span(recorder, "telemetry_overhead", clients=clients):
+        for sim in sims:                                 # compile both
+            jax.block_until_ready(sim.simulate(sim.params, sim.round_keys))
+        for _ in range(repeats):
+            for i, sim in enumerate(sims):
+                t0 = time.perf_counter()
+                jax.block_until_ready(
+                    sim.simulate(sim.params, sim.round_keys))
+                best[i] = min(best[i], time.perf_counter() - t0)
+    off, on = rounds / best[0], rounds / best[1]
+    return {
+        "clients": clients,
+        "rounds": rounds,
+        "rounds_per_s_off": off,
+        "rounds_per_s_on": on,
+        "overhead_frac": 1.0 - on / off,
+    }
+
+
 def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
                kernel: str = "reference", buffer_frac: float = 0.25,
                target_loss: float = 1.8, deadline_s: float = 8.0,
                repeats: int = 2, buffer_size: int | None = None,
-               events: int | None = None) -> dict:
+               events: int | None = None,
+               recorder: SpanRecorder | None = None) -> dict:
     """Time one engine mode on a straggler-heavy fleet (wide CPU + distance
     spread, so the sync barrier pays a long latency tail every round).
 
@@ -147,9 +210,14 @@ def bench_mode(clients: int, rounds: int, mode: str, seed: int = 0,
         rounds=steps, seed=seed, kernel=kernel,
         cell_chunk=max(1, min(cells, 4096 // max(per_cell, 1))))
 
-    sim = build_simulation(cfg, mode=mode)
-    compile_s, warm, out = _time_simulation(sim, repeats)
-    res = sim.finalize(*out)
+    with _span(recorder, "bench_mode", clients=clients, mode=mode,
+               kernel=kernel):
+        with _span(recorder, "build"):
+            sim = build_simulation(cfg, mode=mode)
+        compile_s, warm, out = _time_simulation(sim, repeats,
+                                                recorder=recorder)
+        with _span(recorder, "finalize"):
+            res = sim.finalize(*out)
 
     assert np.all(np.isfinite(res.losses)), f"non-finite losses ({mode})"
     return {
@@ -185,7 +253,24 @@ def _speedups(records: list[dict]) -> list[dict]:
     return out
 
 
-def write_json(records: list[dict], path: str | None = None) -> str:
+def env_metadata() -> dict:
+    """The environment stamp of a bench artifact: enough to tell hardware
+    / toolchain drift from code drift when two BENCH JSONs disagree."""
+    devices = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "device_count": len(devices),
+        "device_kind": devices[0].device_kind if devices else "none",
+        "x64": bool(jax.config.jax_enable_x64),
+        "cpu_count": os.cpu_count(),
+    }
+
+
+def write_json(records: list[dict], path: str | None = None,
+               extra: dict | None = None) -> str:
     os.makedirs(common.RESULTS_DIR, exist_ok=True)
     path = path or os.path.join(common.RESULTS_DIR, JSON_NAME)
     doc = {
@@ -193,9 +278,12 @@ def write_json(records: list[dict], path: str | None = None) -> str:
         "created_unix": time.time(),
         "backend": jax.default_backend(),
         "cpu_count": os.cpu_count(),
+        "env": env_metadata(),
         "results": records,
         "speedups": _speedups(records),
     }
+    if extra:
+        doc.update(extra)
     with open(path, "w") as f:
         json.dump(doc, f, indent=1)
     return path
@@ -376,6 +464,10 @@ def main() -> None:
                     metavar="PATH",
                     help=f"write {JSON_NAME} (default under "
                          "benchmarks/results/)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record build/compile/run wall-clock spans and "
+                         "write them as Chrome-trace JSON "
+                         "(chrome://tracing / Perfetto)")
     ap.add_argument("--repeats", type=int, default=2,
                     help="warm runs per point; best is reported")
     ap.add_argument("--smoke", action="store_true",
@@ -384,6 +476,7 @@ def main() -> None:
 
     emit_json = args.json is not None
     json_path = args.json or None
+    recorder = SpanRecorder() if args.trace else None
     kernel = args.kernel or ("both" if emit_json else "reference")
     kernels = ["reference", "fused"] if kernel == "both" else [kernel]
 
@@ -397,6 +490,8 @@ def main() -> None:
         run_geometry(clients, rounds, args.geometry.split(","),
                      [int(r) for r in args.reuse.split(",")],
                      args.target_loss, args.repeats)
+        if recorder is not None:
+            print(f"wrote {recorder.write(args.trace)}")
         return
 
     if args.compare:
@@ -411,6 +506,8 @@ def main() -> None:
                               args.repeats, buffers=buffers)
         if emit_json:
             print(f"wrote {write_json(records, json_path)}")
+        if recorder is not None:
+            print(f"wrote {recorder.write(args.trace)}")
         return
 
     if args.smoke:
@@ -424,30 +521,42 @@ def main() -> None:
     rows, records = [], []
     for clients in counts:
         for k in kernels:
-            r = bench_one(clients, rounds, kernel=k, repeats=args.repeats)
+            r = bench_one(clients, rounds, kernel=k, repeats=args.repeats,
+                          recorder=recorder)
             records.append(r)
             rows.append([r[h] for h in header])
             print(f"{k:>9s} clients={clients:>7d} cells={r['cells']:>4d} "
                   f"compile={r['compile_s']:6.1f}s run={r['run_s']:7.2f}s "
                   f"{r['rounds_per_s']:8.2f} rounds/s "
                   f"{r['client_rounds_per_s']:12.0f} client-rounds/s")
+    overhead = None
     if emit_json:
         # one async point per kernel so the artifact covers both modes
         async_clients = 64 if args.smoke else min(10000, max(counts))
         async_rounds = 5 if args.smoke else rounds
         for k in kernels:
             r = bench_mode(async_clients, async_rounds, "async", kernel=k,
-                           repeats=args.repeats)
+                           repeats=args.repeats, recorder=recorder)
             records.append(r)
             print(f"{k:>9s} async clients={async_clients:>7d} "
                   f"run={r['run_s']:7.2f}s {r['rounds_per_s']:8.2f} events/s")
+        # the observability tax at the acceptance shape (64 under --smoke)
+        overhead = bench_telemetry_overhead(
+            64 if args.smoke else 1024, 5 if args.smoke else max(rounds, 30),
+            repeats=args.repeats, recorder=recorder)
+        print(f"telemetry overhead @ {overhead['clients']} clients: "
+              f"{overhead['rounds_per_s_off']:.2f} -> "
+              f"{overhead['rounds_per_s_on']:.2f} rounds/s "
+              f"({100 * overhead['overhead_frac']:+.1f}%)")
     for s in _speedups(records):
         print(f"  fused/reference @ {s['clients']:>7d} clients "
               f"({s['mode']}): {s['speedup']:.2f}x")
     path = common.write_csv("fleet_bench.csv", header, rows)
     print(f"wrote {path}")
     if emit_json:
-        print(f"wrote {write_json(records, json_path)}")
+        print(f"wrote {write_json(records, json_path, extra={'telemetry_overhead': overhead})}")
+    if recorder is not None:
+        print(f"wrote {recorder.write(args.trace)}")
 
 
 if __name__ == "__main__":

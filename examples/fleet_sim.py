@@ -19,6 +19,10 @@ round-by-round and final summary.
       --mobility 25               # hex cells, co-channel SINR, mobility
   PYTHONPATH=src python examples/fleet_sim.py --cloud-period 5 \\
       --dirichlet 0.3             # two-tier edge/cloud + non-IID clients
+  PYTHONPATH=src python examples/fleet_sim.py --smoke \\
+      --telemetry-out telemetry.jsonl --trace-out trace.json
+      # in-scan telemetry (histograms, drift, solver diagnostics) as
+      # JSONL records + host phase spans as Chrome-trace JSON
 """
 
 from __future__ import annotations
@@ -31,8 +35,9 @@ import time
 import numpy as np
 
 from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
-                         HexInterference, ScheduleConfig, make_task,
-                         run_fleet)
+                         HexInterference, ScheduleConfig, SpanRecorder,
+                         TelemetryConfig, make_task, run_fleet,
+                         sink_for_path)
 
 
 def main() -> None:
@@ -110,6 +115,15 @@ def main() -> None:
                          "(--task transformer: 1 cell x 8, 10 rounds)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the run's trajectories as JSON (CI artifact)")
+    ap.add_argument("--telemetry-out", default=None, metavar="PATH",
+                    help="enable in-scan telemetry (FleetConfig.telemetry) "
+                         "and emit per-round records through the file sink "
+                         "(.csv -> CSV, else JSONL; fleet/telemetry.py)")
+    ap.add_argument("--telemetry-bins", type=int, default=16,
+                    help="histogram bins of the in-scan telemetry")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write build/run/finalize host phase spans as "
+                         "Chrome-trace JSON (chrome://tracing / Perfetto)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -156,7 +170,9 @@ def main() -> None:
         weight=args.weight, rounds=args.rounds, seed=args.seed, lr=lr,
         cell_chunk=args.cell_chunk, kernel=kernel, task=task,
         cloud_period=args.cloud_period,
-        dirichlet_alpha=(args.dirichlet if args.task == "mlp" else None))
+        dirichlet_alpha=(args.dirichlet if args.task == "mlp" else None),
+        telemetry=(TelemetryConfig(bins=args.telemetry_bins)
+                   if args.telemetry_out else None))
 
     mesh = None
     if args.mesh:
@@ -174,9 +190,17 @@ def main() -> None:
           f"{args.rounds} {unit}, lambda={args.weight}, mode={mode}, "
           f"task={args.task}, kernel={kernel}, geometry={geo_tag}, "
           f"{tier_tag}")
+    sink = sink_for_path(args.telemetry_out) if args.telemetry_out else None
+    recorder = SpanRecorder() if args.trace_out else None
     t0 = time.time()
-    res = run_fleet(cfg, mesh=mesh, progress=True, mode=mode)
+    res = run_fleet(cfg, mesh=mesh, progress=True, mode=mode, sink=sink,
+                    recorder=recorder)
     wall = time.time() - t0
+    if sink is not None:
+        sink.close()
+        print(f"wrote {args.telemetry_out}")
+    if recorder is not None:
+        print(f"wrote {recorder.write(args.trace_out)}")
 
     # write metrics BEFORE the smoke assertion: a failing CI smoke must
     # still ship the trajectory that explains it
@@ -199,6 +223,15 @@ def main() -> None:
         raise SystemExit(
             f"smoke run did not learn: losses {res.losses[0]:.4f} -> "
             f"{res.losses[-1]:.4f}")
+    if args.smoke and res.telemetry is not None:
+        # every telemetry histogram counts every client: per-round mass
+        # must equal the fleet size exactly (fleet/telemetry.histogram)
+        for name in ("per_hist", "rho_hist", "latency_hist"):
+            mass = np.asarray(res.telemetry[name]).sum(axis=(-2, -1))
+            if not np.allclose(mass, n):
+                raise SystemExit(
+                    f"telemetry smoke: {name} mass {mass} != {n} clients")
+        print(f"telemetry smoke OK: histogram mass == {n} clients/round")
 
     print(f"\n{args.rounds} {unit} in {wall:.1f}s "
           f"({args.rounds / wall:.2f} {unit}/s incl. compile)")

@@ -25,6 +25,8 @@ Baselines from §V are provided: GBA, FPR, exhaustive search, ideal FL.
 from __future__ import annotations
 
 import dataclasses
+import warnings
+
 import numpy as np
 
 from repro.core import closed_form as CF
@@ -39,6 +41,7 @@ from repro.core.wireless import (
 )
 
 __all__ = [
+    "SolverConvergenceWarning",
     "TradeoffProblem",
     "TradeoffSolution",
     "solve_pruning",
@@ -51,6 +54,12 @@ __all__ = [
 ]
 
 _LN2 = float(np.log(2.0))
+
+
+class SolverConvergenceWarning(RuntimeWarning):
+    """An iterative solver stopped at its iteration cap without meeting
+    its convergence tolerance; the reported ``residual`` says by how
+    much.  Filterable separately from generic RuntimeWarnings."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +136,12 @@ class TradeoffSolution:
     per: np.ndarray
     iterations: int = 0
     feasible: bool = True
+    # Relative cost movement |cost_k - cost_{k-1}| / max(|cost_k|, 1) at
+    # the last alternation — 0.0-ish when converged, > rtol when the
+    # solver hit max_iters first (in which case solve_alternating also
+    # warns with SolverConvergenceWarning).  Single-shot schemes (GBA /
+    # FPR / exhaustive / ideal) report 0.0.
+    residual: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -193,14 +208,26 @@ def solve_bandwidth(prob: TradeoffProblem, prune: np.ndarray, deadline,
 # ---------------------------------------------------------------------------
 
 def _finish(prob: TradeoffProblem, bandwidth: np.ndarray, prune: np.ndarray,
-            deadline: float, iterations: int) -> TradeoffSolution:
+            deadline: float, iterations: int,
+            residual: float = 0.0) -> TradeoffSolution:
     feasible = bool(np.all(np.isfinite(bandwidth))
                     and np.sum(bandwidth) <= prob.cfg.bandwidth_hz * (1 + 1e-6))
     return TradeoffSolution(
         prune=prune, bandwidth=bandwidth, deadline=deadline,
         inner_cost=prob.inner_cost(deadline, bandwidth, prune),
         total_cost=prob.total_cost(bandwidth, prune),
-        per=prob.per(bandwidth), iterations=iterations, feasible=feasible)
+        per=prob.per(bandwidth), iterations=iterations, feasible=feasible,
+        residual=float(residual))
+
+
+def _warn_not_converged(what: str, iterations: int, residual: float,
+                        rtol: float) -> None:
+    warnings.warn(
+        f"{what} stopped at its iteration cap ({iterations}) without "
+        f"converging: relative residual {residual:.3e} > rtol {rtol:.1e}. "
+        "The reported solution is the last iterate; raise max_iters or "
+        "loosen rtol to silence this.", SolverConvergenceWarning,
+        stacklevel=3)
 
 
 def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
@@ -233,14 +260,19 @@ def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
                             prob.cfg.bandwidth_hz / prob.num_clients)
         prev_cost = np.inf
         deadline, prune = solve_pruning(prob, bandwidth)
+        resid = np.inf
         for it in range(1, max_iters + 1):
             deadline, prune = solve_pruning(prob, bandwidth)
             bandwidth = solve_bandwidth(prob, prune, deadline)
             cost = prob.inner_cost(deadline, bandwidth, prune)
-            if abs(prev_cost - cost) <= rtol * max(abs(cost), 1.0):
-                return _finish(prob, bandwidth, prune, deadline, it)
+            resid = abs(prev_cost - cost) / max(abs(cost), 1.0)
+            if resid <= rtol:
+                return _finish(prob, bandwidth, prune, deadline, it,
+                               residual=resid)
             prev_cost = cost
-        return _finish(prob, bandwidth, prune, deadline, max_iters)
+        _warn_not_converged("Algorithm 1 alternation", max_iters, resid, rtol)
+        return _finish(prob, bandwidth, prune, deadline, max_iters,
+                       residual=resid)
 
     msk = np.ones(prob.num_clients) if mask is None \
         else np.asarray(mask, dtype=np.float64)
@@ -257,6 +289,7 @@ def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
 
     bandwidth = msk * (b_total / max(float(np.sum(msk)), 1.0))
     prev_cost = np.inf
+    resid = np.inf
     deadline, prune = solve_pruning(prob, bandwidth, mask=msk, m=m_eff)
     for it in range(1, max_iters + 1):
         t_np = prob.no_prune_latency(bandwidth)
@@ -277,10 +310,14 @@ def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
             bandwidth = bandwidth * keep
         bandwidth = np.where(participating, bandwidth, 0.0)
         cost = inner_cost(deadline, bandwidth, prune)
-        if abs(prev_cost - cost) <= rtol * max(abs(cost), 1.0):
+        resid = abs(prev_cost - cost) / max(abs(cost), 1.0)
+        if resid <= rtol:
             break
         prev_cost = cost
-    sol = _finish(prob, bandwidth, prune, deadline, it)
+    else:
+        _warn_not_converged("Algorithm 1 alternation (masked)", max_iters,
+                            resid, rtol)
+    sol = _finish(prob, bandwidth, prune, deadline, it, residual=resid)
     sol.per = sol.per * msk
     sol.inner_cost = cost
     return sol

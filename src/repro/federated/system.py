@@ -20,6 +20,7 @@ Two 5-UE-scale paths coexist:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable, Optional
 
@@ -237,6 +238,8 @@ def _host_cell_solver(fcfg, pop):
             i_cur = np.zeros(cells)
             i_solved = i_cur
             fp_it = 0
+            fp_err = np.inf
+            converged = False
             for _ in range(scfg.fp_iters):
                 out = solve_cells(h_up_np, mask_np, m_np, cap_np, i_cur)
                 bw = out[1]
@@ -249,8 +252,18 @@ def _host_cell_solver(fcfg, pop):
                 i_solved = i_cur
                 i_cur = i_new
                 fp_it += 1
+                fp_err = float(err)
                 if err <= scfg.fp_rtol * scale:
+                    converged = True
                     break
+            if not converged:
+                warnings.warn(
+                    f"interference fixed point stopped at fp_iters="
+                    f"{scfg.fp_iters} without converging: residual "
+                    f"{fp_err:.3e} W/Hz > fp_rtol*scale; using the last "
+                    "iterate (raise SolverConfig.fp_iters or fp_damping "
+                    "to fix)", tradeoff.SolverConvergenceWarning,
+                    stacklevel=2)
 
         prune, bandwidth, per, deadline, inner = out
         return FSOLVER.CellSolution(
@@ -262,12 +275,14 @@ def _host_cell_solver(fcfg, pop):
             interference_psd=(None if i_solved is None
                               else jnp.asarray(i_solved)),
             fp_iterations=(None if fp_it is None
-                           else jnp.asarray(fp_it, jnp.int32)))
+                           else jnp.asarray(fp_it, jnp.int32)),
+            fp_residual=(None if fp_it is None
+                         else jnp.asarray(fp_err)))
 
     return solve
 
 
-def run_fleet_reference(fcfg, progress: bool = False):
+def run_fleet_reference(fcfg, progress: bool = False, sink=None):
     """The 5-UE path on the task substrate: per-round host stepping.
 
     Same ``FleetTask``, population, PRNG draws and FedSGD/aggregation
@@ -282,6 +297,10 @@ def run_fleet_reference(fcfg, progress: bool = False):
     interference-coupled geometries (the host solver runs the same damped
     fixed point; see ``_host_cell_solver``).  Sync single-tier only: the
     two-tier edge/cloud mode has no host-stepped twin.
+
+    ``fcfg.telemetry`` rides along exactly as on the fleet path (the
+    metric dicts carry the same ``tel_*`` keys); ``sink`` optionally
+    receives the run's per-round records (``fleet.telemetry``).
     """
     from repro.fleet import engine as FE
 
@@ -308,7 +327,12 @@ def run_fleet_reference(fcfg, progress: bool = False):
     sim = FE.Simulation(cfg=cfg2, simulate=None, params=params,
                         round_keys=keys[:cfg2.rounds],
                         num_samples=pop.num_samples, mode="sync")
-    return sim.finalize(carry, metrics)
+    result = sim.finalize(carry, metrics)
+    if sink is not None:
+        from repro.fleet import telemetry as FTEL
+        FTEL.emit_result(result, sink, meta={
+            "path": "reference", "clients": cfg2.topology.num_clients})
+    return result
 
 
 def run_any(cfg: FLConfig, progress: bool = False, fleet_threshold: int = 64,

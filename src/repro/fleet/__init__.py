@@ -13,6 +13,13 @@ FedSGD barrier (default), FedBuff-style buffered aggregation with
 staleness-discounted merging (``run_fleet(..., mode="async")``,
 configured by ``AsyncConfig``), and — orthogonal to both — two-tier
 edge/cloud hierarchical aggregation (``FleetConfig(cloud_period=n)``).
+
+Observability is opt-in (`telemetry`): ``FleetConfig(telemetry=
+TelemetryConfig(...))`` rides fixed-size per-round summaries (histograms,
+staleness / gradient drift, solver diagnostics) through the scan into
+``FleetResult.telemetry``; ``SpanRecorder`` captures host phase spans as
+Chrome-trace JSON, and ``TelemetrySink`` implementations (memory / JSONL
+/ CSV) receive per-round records via ``run_fleet(..., sink=...)``.
 """
 
 from repro.fleet.engine import (  # noqa: F401
@@ -20,6 +27,9 @@ from repro.fleet.engine import (  # noqa: F401
     resolve_task, run, run_fleet, time_to_loss)
 from repro.fleet.scheduler import AsyncConfig, ScheduleConfig  # noqa: F401
 from repro.fleet.solver import SolverConfig  # noqa: F401
+from repro.fleet.telemetry import (  # noqa: F401
+    CSVSink, JSONLSink, MemorySink, SpanRecorder, TelemetryConfig,
+    TelemetrySink, emit_result, sink_for_path)
 from repro.fleet.task import (  # noqa: F401
     FleetTask, LinearRegressionTask, SyntheticMLPTask, TransformerTask,
     make_task)

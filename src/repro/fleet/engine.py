@@ -83,6 +83,7 @@ from repro.fleet import scheduler as SCHED
 from repro.fleet import solver as SOLVER
 from repro.fleet import topology as TOPO
 from repro.fleet import task as TASK
+from repro.fleet import telemetry as TEL
 
 PyTree = Any
 
@@ -172,6 +173,14 @@ class FleetConfig:
     # IID, bit-identical draws).  Explicit tasks carry their own
     # dirichlet_alpha field; setting both is an error.
     dirichlet_alpha: Optional[float] = None
+    # Opt-in in-scan telemetry (fleet/telemetry.py): fixed-size per-round
+    # summaries — per-cell PER/SINR/latency/rho/bandwidth histograms,
+    # staleness distribution (async), gradient-norm / mask-density drift,
+    # solver diagnostics — ride the scan as extra ``tel_*`` metric keys
+    # and come out as ``FleetResult.telemetry``.  None (the default)
+    # leaves the compiled program structurally unchanged: trajectories
+    # are bit-identical to a build without the telemetry module.
+    telemetry: Optional[TEL.TelemetryConfig] = None
 
 
 _LEGACY_TASK_FIELDS = ("feature_dim", "hidden", "num_classes", "local_batch",
@@ -226,7 +235,10 @@ class FleetResult:
     ``wall_clock`` is its cumulative sum — the simulated time axis, which
     is what makes sync-vs-async time-to-target-loss comparable.
     ``staleness`` is the cohort-mean merge age in server versions (all
-    zeros for sync).
+    zeros for sync).  ``telemetry`` holds the opt-in in-scan summaries
+    (``FleetConfig.telemetry``) keyed without their ``tel_`` scan prefix
+    — ``per_hist`` / ``sinr_hist`` / ``grad_norm`` / ... — or None when
+    telemetry was off.
     """
 
     losses: np.ndarray            # (rounds,)
@@ -243,6 +255,7 @@ class FleetResult:
     wall_clock: np.ndarray = None  # (rounds,) cumulative simulated time, s
     staleness: np.ndarray = None   # (rounds,) mean merge age, versions
     mode: str = "sync"
+    telemetry: Optional[dict] = None  # opt-in in-scan summaries (no prefix)
 
 
 _CACHE_LIMIT_BYTES = 512 << 20
@@ -431,6 +444,9 @@ class RoundControl(NamedTuple):
     sol: SOLVER.CellSolution
     t_client: jnp.ndarray   # (C, I) realized downlink+compute+uplink, s
     m_round: jnp.ndarray    # (C,) scheduled-subset Eq.-(11) coefficient
+    # realized per-client uplink SINR in dB — only computed under
+    # telemetry (the SINR histogram's input); None otherwise
+    sinr_db: Optional[jnp.ndarray] = None
 
 
 def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
@@ -456,11 +472,13 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     w = cfg.wireless
     n0, b_hz = w.noise_psd_w_per_hz, w.bandwidth_hz
     geo = resolve_geometry(cfg)
+    tcfg = cfg.telemetry
 
     def control(rkey: jax.Array) -> RoundControl:
         k_fade, k_part, k_strag, k_arr = jax.random.split(rkey, 4)
 
-        chan = geo.round_channel(k_fade, pop, cfg.topology)
+        with jax.named_scope("fleet.channel"):
+            chan = geo.round_channel(k_fade, pop, cfg.topology)
         h_up, h_down = chan.h_up, chan.h_down
         mask = SCHED.participation_mask(k_part, cfg.schedule, pop.num_samples)
         ho = SCHED.handover_mask(chan.served_home, cfg.schedule)
@@ -485,16 +503,18 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             cap = jnp.maximum(cfg.schedule.round_deadline_s
                               - w.aggregation_latency_s - t_d[..., 0], 0.0)
 
-        if solve_fn is None:
-            sol = SOLVER.solve_fleet(
-                h_up, pop.num_samples, pop.cpu_hz, pop.tx_power,
-                pop.max_prune, m_round, mask, cap, bandwidth_hz=b_hz,
-                noise_psd=n0, waterfall_m0=w.waterfall_m0,
-                model_bits=w.model_bits,
-                cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
-                solver=cfg.solver, interference=chan.interference)
-        else:
-            sol = solve_fn(h_up, mask, m_round, cap, chan.interference)
+        with jax.named_scope("fleet.solve"):
+            if solve_fn is None:
+                sol = SOLVER.solve_fleet(
+                    h_up, pop.num_samples, pop.cpu_hz, pop.tx_power,
+                    pop.max_prune, m_round, mask, cap, bandwidth_hz=b_hz,
+                    noise_psd=n0, waterfall_m0=w.waterfall_m0,
+                    model_bits=w.model_bits,
+                    cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
+                    solver=cfg.solver, interference=chan.interference,
+                    diagnostics=tcfg is not None and tcfg.solver)
+            else:
+                sol = solve_fn(h_up, mask, m_round, cap, chan.interference)
 
         # Realized per-client latency (Eq. 4 terms, broadcast over cells);
         # with interference the realized uplink rate prices the solver's
@@ -508,13 +528,22 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         t_u = CF.upload_latency(sol.prune, w.model_bits, r_u, xp=jnp)
         t_client = t_d + t_c + t_u
 
+        # The SINR histogram's input: only computed when telemetry asks
+        # for it (no PRNG involved, so the draw sequence is unchanged).
+        sinr_db = None
+        if tcfg is not None:
+            sinr = CF.uplink_sinr(sol.bandwidth, pop.tx_power, h_up, n0,
+                                  interference_psd=i_psd, xp=jnp)
+            sinr_db = 10.0 * jnp.log10(sinr)
+
         strag = SCHED.straggler_mask(k_strag, cfg.schedule, mask.shape)
         # Packet indicators C_i ~ Bernoulli(1 - q_i), drawn up-front (the
         # outcome is decided at transmission; async merges it later).
         arrivals = (jax.random.uniform(k_arr, sol.per.shape)
                     >= sol.per).astype(jnp.result_type(float))
         return RoundControl(mask=mask, strag=strag, arrivals=arrivals,
-                            sol=sol, t_client=t_client, m_round=m_round)
+                            sol=sol, t_client=t_client, m_round=m_round,
+                            sinr_db=sinr_db)
 
     return control
 
@@ -571,6 +600,9 @@ def _round_metrics(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         "bandwidth_util": jnp.sum(sol.bandwidth, axis=-1) / w.bandwidth_hz,
         "learning_cost": learning,
     }
+    if cfg.telemetry is not None:
+        metrics.update(TEL.control_summaries(
+            cfg.telemetry, sol, t_client, ctl.sinr_db, w.bandwidth_hz))
     return metrics, q_eff
 
 
@@ -587,18 +619,27 @@ def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
         mask, sol = ctl.mask, ctl.sol
         active, arrivals, agg_w = _round_activity(cfg, pop, ctl)
 
-        g_wsum, w_sum, mean_loss = _fleet_grads(
-            task, params, sol.prune, agg_w, mask, batch_fn, cfg, data=data,
-            mesh=mesh)
+        with jax.named_scope("fleet.gradient"):
+            g_wsum, w_sum, mean_loss = _fleet_grads(
+                task, params, sol.prune, agg_w, mask, batch_fn, cfg,
+                data=data, mesh=mesh)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
-        new_params = jax.tree.map(
-            lambda p, g: jnp.where(
-                w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
-            params, g_wsum)
+        with jax.named_scope("fleet.merge"):
+            new_params = jax.tree.map(
+                lambda p, g: jnp.where(
+                    w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
+                params, g_wsum)
 
         metrics, q_eff = _round_metrics(cfg, pop, ctl, active, arrivals,
                                         mean_loss)
-        metrics = _merge_eval(metrics, task, state, new_params)
+        tcfg = cfg.telemetry
+        if tcfg is not None and tcfg.gradients:
+            n_sched = jnp.maximum(jnp.sum(mask), 1.0)
+            metrics.update(TEL.grad_summaries(
+                tcfg, TEL.tree_sq_norm(g_wsum) / (denom * denom),
+                jnp.sum((1.0 - sol.prune) * mask) / n_sched))
+        with jax.named_scope("fleet.eval"):
+            metrics = _merge_eval(metrics, task, state, new_params)
         return (new_params, per_sum + q_eff, prune_sum + sol.prune * mask), \
             metrics
 
@@ -699,6 +740,9 @@ def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
                              if data is not None else ([], None))
     data_cells = [a.reshape((c, i) + a.shape[1:]) for a in data_leaves]
 
+    tcfg = cfg.telemetry
+    grad_tel = tcfg is not None and tcfg.gradients
+
     def cell_body(_, inp):
         theta_c, idx_c, rho_c, aggw_c, schedw_c = inp[:5]
         extra = inp[5:]
@@ -713,7 +757,10 @@ def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
             lambda p, gg: jnp.where(
                 wsum > 0, (p - cfg.lr * gg / denom).astype(p.dtype), p),
             theta_c, g)
-        return None, (theta2, wsum, lsum, lw)
+        out = (theta2, wsum, lsum, lw)
+        if grad_tel:  # this cell's edge-step norm^2 (telemetry only)
+            out = out + (TEL.tree_sq_norm(g) / (denom * denom),)
+        return None, out
 
     def round_fn(carry, xs):
         rkey, ridx = xs
@@ -721,24 +768,33 @@ def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
         ctl = control(rkey)
         active, arrivals, agg_w = _round_activity(cfg, pop, ctl)
 
-        _, (edge2, wsums, lsums, lws) = jax.lax.scan(
-            cell_body, None,
-            (edge, idx, ctl.sol.prune, agg_w, ctl.mask, *data_cells))
+        with jax.named_scope("fleet.gradient"):
+            _, cell_out = jax.lax.scan(
+                cell_body, None,
+                (edge, idx, ctl.sol.prune, agg_w, ctl.mask, *data_cells))
+        edge2, wsums, lsums, lws = cell_out[:4]
         mean_loss = jnp.sum(lsums) / jnp.maximum(jnp.sum(lws), 1.0)
 
         acc2 = acc_w + wsums
-        cloud = _cloud_view(edge2, acc2, k_cell)
-        do_merge = (ridx % cfg.cloud_period) == (cfg.cloud_period - 1)
-        edge3 = jax.tree.map(
-            lambda e, cl: jnp.where(do_merge, jnp.broadcast_to(
-                cl, e.shape).astype(e.dtype), e), edge2, cloud)
-        acc3 = jnp.where(do_merge, jnp.zeros_like(acc2), acc2)
+        with jax.named_scope("fleet.cloud_merge"):
+            cloud = _cloud_view(edge2, acc2, k_cell)
+            do_merge = (ridx % cfg.cloud_period) == (cfg.cloud_period - 1)
+            edge3 = jax.tree.map(
+                lambda e, cl: jnp.where(do_merge, jnp.broadcast_to(
+                    cl, e.shape).astype(e.dtype), e), edge2, cloud)
+            acc3 = jnp.where(do_merge, jnp.zeros_like(acc2), acc2)
 
         metrics, q_eff = _round_metrics(cfg, pop, ctl, active, arrivals,
                                         mean_loss)
         metrics["round_latency"] = metrics["round_latency"] \
             + jnp.where(do_merge, w.backhaul_s, 0.0)
-        metrics = _merge_eval(metrics, task, state, cloud)
+        if grad_tel:
+            n_sched = jnp.maximum(jnp.sum(ctl.mask), 1.0)
+            metrics.update(TEL.grad_summaries(
+                tcfg, jnp.sum(cell_out[4]),
+                jnp.sum((1.0 - ctl.sol.prune) * ctl.mask) / n_sched))
+        with jax.named_scope("fleet.eval"):
+            metrics = _merge_eval(metrics, task, state, cloud)
         return (edge3, acc3, per_sum + q_eff,
                 prune_sum + ctl.sol.prune * ctl.mask), metrics
 
@@ -874,7 +930,9 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
                 return _client_grad(task, stale_params, rho_i, b_i, cfg,
                                     mask_kind=mk)
 
-            losses, grads = jax.vmap(one)(batch, gather(st.rho, sel), tau)
+            with jax.named_scope("fleet.gradient"):
+                losses, grads = jax.vmap(one)(batch, gather(st.rho, sel),
+                                              tau)
             if not two_tier:  # two-tier merges per cell from `grads` below
                 g_wsum = jax.tree.map(
                     lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
@@ -900,10 +958,11 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
                     return g, jnp.where(in_slot, l, 0.0).astype(ldtype)
 
                 shapes = jax.eval_shape(compute)
-                g_s, l_s = jax.lax.cond(
-                    jnp.any(in_slot), compute,
-                    lambda: jax.tree.map(
-                        lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes))
+                with jax.named_scope("fleet.gradient"):
+                    g_s, l_s = jax.lax.cond(
+                        jnp.any(in_slot), compute,
+                        lambda: jax.tree.map(
+                            lambda sh: jnp.zeros(sh.shape, sh.dtype), shapes))
                 g_wsum = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), g_wsum, g_s)
                 losses = losses + l_s
@@ -927,9 +986,10 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
                 return jnp.where((den > 0).reshape(shape),
                                  (e - cfg.lr * num / d).astype(e.dtype), e)
 
-            edge2 = jax.tree.map(edge_update, edge, grads)
-            acc2 = acc_w + den
-            cloud = _cloud_view(edge2, acc2, k_cell)
+            with jax.named_scope("fleet.cloud_merge"):
+                edge2 = jax.tree.map(edge_update, edge, grads)
+                acc2 = acc_w + den
+                cloud = _cloud_view(edge2, acc2, k_cell)
             do_merge = ((version + 1) % cfg.cloud_period) == 0
             acc_out = jnp.where(do_merge, jnp.zeros_like(acc2), acc2)
             edge_out = jax.tree.map(
@@ -943,10 +1003,12 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
             eval_params = cloud
             now2 = now2 + jnp.where(do_merge, w.backhaul_s, 0.0)
         else:
-            new_params = jax.tree.map(
-                lambda p, g: jnp.where(
-                    w_sum > 0, (p - cfg.lr * g / denom).astype(p.dtype), p),
-                params, g_wsum)
+            with jax.named_scope("fleet.merge"):
+                new_params = jax.tree.map(
+                    lambda p, g: jnp.where(
+                        w_sum > 0,
+                        (p - cfg.lr * g / denom).astype(p.dtype), p),
+                    params, g_wsum)
             eval_params = new_params
         version2 = version + 1
         head2 = (head + 1) % hist_len
@@ -987,10 +1049,30 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
             "staleness": jnp.mean(tau.astype(jnp.result_type(float))),
             "sim_time": now2,
         }
-        metrics = _merge_eval(metrics, task, state, eval_params)
+        tcfg = cfg.telemetry
+        if tcfg is not None:
+            metrics.update(
+                TEL.staleness_summary(tcfg, tau, acfg.max_staleness))
+            if tcfg.gradients:
+                # the cohort-aggregate update norm (two-tier recombines
+                # the per-client grads; single-tier reuses g_wsum)
+                g_tel = g_wsum if not two_tier else jax.tree.map(
+                    lambda g: jnp.einsum("c,c...->...", w_merge, g), grads)
+                metrics.update(TEL.grad_summaries(
+                    tcfg, TEL.tree_sq_norm(g_tel) / (denom * denom),
+                    jnp.sum(coh * (1.0 - st.rho) * st.sched) / n_sched))
+        with jax.named_scope("fleet.eval"):
+            metrics = _merge_eval(metrics, task, state, eval_params)
 
-        # -- 5. merged clients re-download version2 and start a new cycle
-        st2 = _start_state(control(rkey), now2, version2, st, coh, cfg)
+        # -- 5. merged clients re-download version2 and start a new cycle;
+        # the restart's control draw doubles as the event's control-
+        # telemetry snapshot (same draw whether telemetry is on or off)
+        ctl2 = control(rkey)
+        if tcfg is not None:
+            metrics.update(TEL.control_summaries(
+                tcfg, ctl2.sol, ctl2.t_client, ctl2.sinr_db,
+                w.bandwidth_hz))
+        st2 = _start_state(ctl2, now2, version2, st, coh, cfg)
         st2 = st2._replace(per_sum=per_sum2, prune_sum=prune_sum2)
         if two_tier:
             return (hist2, head2, version2, now2, st2, edge_out,
@@ -1056,6 +1138,7 @@ class Simulation:
         is the cloud view (weighted edge mean — equal to the last cloud
         merge when the final round merged)."""
         cfg = self.cfg
+        metrics, tel = TEL.split_metrics(metrics)
         if self.mode == "async":
             if self.two_tier:
                 hist, head, _, _, st, edge, acc_w = carry
@@ -1099,6 +1182,8 @@ class Simulation:
             wall_clock=wall,
             staleness=staleness,
             mode=self.mode,
+            telemetry=(None if tel is None
+                       else {k: np.asarray(v) for k, v in tel.items()}),
         )
 
 
@@ -1220,7 +1305,9 @@ def build_simulation(cfg: FleetConfig, mesh=None,
 
 
 def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False,
-              mode: str = "sync") -> FleetResult:
+              mode: str = "sync",
+              sink: Optional[TEL.TelemetrySink] = None,
+              recorder: Optional[TEL.SpanRecorder] = None) -> FleetResult:
     """Simulate ``cfg.rounds`` fleet FL rounds/events as one compiled scan.
 
     Args:
@@ -1231,15 +1318,32 @@ def run_fleet(cfg: FleetConfig, mesh=None, progress: bool = False,
         whole run is one device program — there is nothing to stream from
         inside it): every rounds//10-th round plus the final one.
       mode: ``"sync"`` or ``"async"`` (FedBuff buffered aggregation).
+      sink: optional ``telemetry.TelemetrySink``; the run's header and
+        per-round records (``telemetry.round_records``) are emitted into
+        it after the scan returns (the sink is not closed).
+      recorder: optional ``telemetry.SpanRecorder``; the build / simulate
+        / finalize phases are recorded as wall-clock spans (exportable as
+        Chrome-trace JSON via ``recorder.write``).
 
     Returns:
       A ``FleetResult``; trajectories are indexed by round (sync) or
       server event (async), with ``wall_clock`` as the common time axis.
+      ``result.telemetry`` carries the in-scan summaries when
+      ``cfg.telemetry`` is set.
     """
-    sim = build_simulation(cfg, mesh=mesh, mode=mode)
-    carry, metrics = sim.simulate(sim.params, sim.round_keys)
-    jax.block_until_ready(metrics)
-    result = sim.finalize(carry, metrics)
+    rec = recorder if recorder is not None else TEL.SpanRecorder()
+    with rec.span("fleet.build", mode=mode,
+                  clients=cfg.topology.num_clients):
+        sim = build_simulation(cfg, mesh=mesh, mode=mode)
+    with rec.span("fleet.simulate", rounds=cfg.rounds):
+        carry, metrics = sim.simulate(sim.params, sim.round_keys)
+        jax.block_until_ready(metrics)
+    with rec.span("fleet.finalize"):
+        result = sim.finalize(carry, metrics)
+    if sink is not None:
+        TEL.emit_result(result, sink, meta={
+            "clients": cfg.topology.num_clients, "kernel": cfg.kernel,
+            "cloud_period": cfg.cloud_period})
 
     if progress:
         shown = sorted(set(range(0, cfg.rounds, max(cfg.rounds // 10, 1)))

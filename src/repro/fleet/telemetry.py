@@ -1,0 +1,417 @@
+"""Fleet telemetry substrate: in-scan summaries, trace spans, sinks.
+
+Three observability layers, all opt-in (``FleetConfig(telemetry=...)`` is
+``None`` by default and the default path is bit-identical to a build
+without this module):
+
+* **In-scan deep telemetry** — ``TelemetryConfig`` selects fixed-size
+  per-round summaries that ride the engine's ``lax.scan`` as extra
+  metric outputs with zero host round-trips: per-cell static-bin
+  histograms of PER / SINR / latency / rho / bandwidth share
+  (``histogram``), the async staleness distribution, gradient-norm and
+  mask-density drift, and solver diagnostics (Algorithm-1 alternation
+  counts, interference fixed-point residual trajectories) surfaced out
+  of ``fleet/solver.py``'s ``while_loop``s.  Everything is shape-static
+  — bin edges are config constants, so a million-client round emits the
+  same few-KB summary as a 5-UE round.
+
+* **Trace spans** — ``SpanRecorder`` wraps host-side phases
+  (build / compile / run / finalize) in ``jax.profiler.TraceAnnotation``
+  and records wall-clock spans exportable as Chrome-trace JSON
+  (``chrome://tracing`` / Perfetto).  Inside the compiled program the
+  engine's phases are annotated with ``jax.named_scope`` (solve /
+  gradient / merge / eval / cloud_merge), so device profiles group by
+  phase too.
+
+* **Sinks** — the tiny ``TelemetrySink`` protocol (``emit(record)`` /
+  ``close()``) with in-memory, JSONL and CSV implementations; the
+  engine, the 5-UE reference path, the benchmarks and the examples all
+  emit per-round records through ``emit_result``.
+
+See ``docs/observability.md`` for semantics and usage.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import csv
+import dataclasses
+import json
+import os
+import threading
+import time
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PREFIX = "tel_"
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryConfig:
+    """Static knobs of the in-scan telemetry (hashable: safe to close over).
+
+    Every histogram uses ``bins`` fixed equal-width bins over a static
+    ``*_range``; values outside the range clip into the edge bins, so
+    each histogram's total mass is exactly the number of counted clients
+    (the smoke-testable invariant).  Ranges are physical:
+
+    * ``per_range`` / ``rho_range`` / ``bw_share_range`` — probabilities
+      and fractions in [0, 1].
+    * ``sinr_db_range`` — per-client uplink SINR in dB (clients with no
+      allocation clip into the top bin: zero-bandwidth PSD SINR is +inf).
+    * ``latency_range_s`` — realized per-client round latency in seconds
+      (download + compute + upload); unschedulable clients (infinite
+      latency) clip into the top bin.
+
+    ``staleness_bins`` buckets the async merge age tau in server versions
+    over [0, max_staleness + 1).  ``solver`` adds Algorithm-1 alternation
+    counts and — under an interference geometry — the damped fixed
+    point's residual trajectory / iteration count.  ``gradients`` adds
+    the aggregated-gradient L2 norm and the solver-implied mask density
+    (scheduled-mean 1 - rho) per round.
+    """
+
+    bins: int = 16
+    per_range: tuple[float, float] = (0.0, 1.0)
+    rho_range: tuple[float, float] = (0.0, 1.0)
+    bw_share_range: tuple[float, float] = (0.0, 1.0)
+    sinr_db_range: tuple[float, float] = (-20.0, 60.0)
+    latency_range_s: tuple[float, float] = (0.0, 10.0)
+    staleness_bins: int = 8
+    solver: bool = True
+    gradients: bool = True
+
+    def __post_init__(self):
+        if self.bins < 1:
+            raise ValueError(f"bins must be >= 1, got {self.bins}")
+        if self.staleness_bins < 1:
+            raise ValueError(
+                f"staleness_bins must be >= 1, got {self.staleness_bins}")
+        for name in ("per_range", "rho_range", "bw_share_range",
+                     "sinr_db_range", "latency_range_s"):
+            lo, hi = getattr(self, name)
+            if not hi > lo:
+                raise ValueError(f"{name} must satisfy hi > lo, got "
+                                 f"({lo}, {hi})")
+
+
+def bin_edges(lo: float, hi: float, bins: int) -> np.ndarray:
+    """The ``bins + 1`` static bin edges of a telemetry histogram."""
+    return np.linspace(lo, hi, bins + 1)
+
+
+# ---------------------------------------------------------------------------
+# In-scan summaries (pure jnp — jit/vmap/scan safe, shape static)
+# ---------------------------------------------------------------------------
+
+def histogram(x: jnp.ndarray, lo: float, hi: float, bins: int,
+              weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Static-bin histogram over the last axis: (..., I) -> (..., bins).
+
+    Values clip into [lo, hi] first (out-of-range mass lands in the edge
+    bins; +/-inf included), and NaNs count in the bottom bin — so the
+    unweighted total mass is always exactly the number of elements
+    reduced, which is what lets a smoke test assert
+    ``hist.sum() == num_clients``.  ``weights`` (same shape as ``x``)
+    turns counts into weighted mass.
+    """
+    dtype = jnp.result_type(float)
+    x = jnp.nan_to_num(jnp.asarray(x, dtype), nan=lo, posinf=hi, neginf=lo)
+    x = jnp.clip(x, lo, hi)
+    idx = jnp.minimum(
+        jnp.floor((x - lo) * (bins / (hi - lo))).astype(jnp.int32), bins - 1)
+    w = jnp.ones_like(x) if weights is None else jnp.asarray(weights, dtype)
+    # scatter-add into per-row offset bins: O(N) instead of the O(N*bins)
+    # one-hot matmul — the histograms are the bulk of the in-scan
+    # telemetry cost, and this keeps the overhead within budget
+    lead, n = x.shape[:-1], x.shape[-1] if x.ndim else 1
+    rows = int(np.prod(lead)) if lead else 1
+    flat = (idx.reshape(rows, n)
+            + (jnp.arange(rows, dtype=jnp.int32) * bins)[:, None])
+    out = jnp.zeros(rows * bins, dtype).at[flat.reshape(-1)].add(
+        w.reshape(-1))
+    return out.reshape(*lead, bins)
+
+
+def control_summaries(tcfg: TelemetryConfig, sol, t_client: jnp.ndarray,
+                      sinr_db: Optional[jnp.ndarray],
+                      bandwidth_hz: float) -> dict[str, jnp.ndarray]:
+    """Per-cell histograms + solver diagnostics of one control pass.
+
+    ``sol`` is a ``fleet.solver.CellSolution`` (duck-typed: ``prune`` /
+    ``bandwidth`` / ``per`` / ``iterations`` and the optional ``fp_*``
+    interference diagnostics); ``t_client`` the realized (C, I) latency;
+    ``sinr_db`` the realized per-client uplink SINR in dB (None skips the
+    SINR histogram — the host reference solver path does not expose it).
+    All histograms count *every* client (mass per cell = I), so
+    distribution mass is invariant across schedules.
+    """
+    b = tcfg.bins
+    out = {
+        PREFIX + "per_hist": histogram(sol.per, *tcfg.per_range, b),
+        PREFIX + "rho_hist": histogram(sol.prune, *tcfg.rho_range, b),
+        PREFIX + "bw_hist": histogram(sol.bandwidth / bandwidth_hz,
+                                      *tcfg.bw_share_range, b),
+        PREFIX + "latency_hist": histogram(t_client, *tcfg.latency_range_s,
+                                           b),
+    }
+    if sinr_db is not None:
+        out[PREFIX + "sinr_hist"] = histogram(sinr_db, *tcfg.sinr_db_range, b)
+    if tcfg.solver:
+        out[PREFIX + "solver_iters"] = sol.iterations
+        if sol.fp_iterations is not None:
+            out[PREFIX + "fp_iterations"] = sol.fp_iterations
+        if sol.fp_residual is not None:
+            out[PREFIX + "fp_residual"] = sol.fp_residual
+        if sol.fp_residuals is not None:
+            out[PREFIX + "fp_residuals"] = sol.fp_residuals
+    return out
+
+
+def grad_summaries(tcfg: TelemetryConfig, grad_sq_sum: jnp.ndarray,
+                   mask_density: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """Gradient-norm / mask-density drift entries (``tcfg.gradients``)."""
+    if not tcfg.gradients:
+        return {}
+    return {PREFIX + "grad_norm": jnp.sqrt(grad_sq_sum),
+            PREFIX + "mask_density": mask_density}
+
+
+def tree_sq_norm(tree) -> jnp.ndarray:
+    """Sum of squares over every leaf of a pytree (scalar)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    dtype = jnp.result_type(float)
+    total = jnp.zeros((), dtype)
+    for leaf in leaves:
+        total = total + jnp.sum(jnp.square(leaf.astype(dtype)))
+    return total
+
+
+def staleness_summary(tcfg: TelemetryConfig, tau: jnp.ndarray,
+                      max_staleness: int) -> dict[str, jnp.ndarray]:
+    """Histogram of the merged cohort's staleness (server versions)."""
+    hist = histogram(tau, 0.0, float(max_staleness + 1), tcfg.staleness_bins)
+    return {PREFIX + "staleness_hist": hist}
+
+
+def split_metrics(metrics: dict) -> tuple[dict, Optional[dict]]:
+    """Split a metrics dict into (core metrics, telemetry dict or None).
+
+    Telemetry keys carry the ``tel_`` prefix inside the scan; the
+    returned telemetry dict is keyed without it (``per_hist``, ...).
+    """
+    core = {k: v for k, v in metrics.items() if not k.startswith(PREFIX)}
+    tel = {k[len(PREFIX):]: v for k, v in metrics.items()
+           if k.startswith(PREFIX)}
+    return core, (tel or None)
+
+
+# ---------------------------------------------------------------------------
+# Trace spans (host wall-clock; Chrome-trace JSON export)
+# ---------------------------------------------------------------------------
+
+class SpanRecorder:
+    """Record named wall-clock spans; export as Chrome-trace JSON.
+
+    Each ``span`` also enters a ``jax.profiler.TraceAnnotation`` so the
+    phase shows up in a ``jax.profiler.trace`` capture when one is
+    active.  Spans may nest; events carry the thread id, so the Chrome
+    trace viewer (``chrome://tracing`` or Perfetto) renders nesting
+    correctly.  Timestamps are microseconds relative to recorder
+    construction.
+    """
+
+    def __init__(self):
+        self._t0 = time.perf_counter()
+        self._lock = threading.Lock()
+        self.events: list[dict] = []
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args):
+        start = time.perf_counter()
+        try:
+            annotation = jax.profiler.TraceAnnotation(name)
+        except Exception:           # pragma: no cover - profiler unavailable
+            annotation = contextlib.nullcontext()
+        with annotation:
+            try:
+                yield self
+            finally:
+                end = time.perf_counter()
+                event = {
+                    "name": name, "ph": "X", "cat": "fleet",
+                    "ts": (start - self._t0) * 1e6,
+                    "dur": (end - start) * 1e6,
+                    "pid": os.getpid(), "tid": threading.get_ident(),
+                }
+                if args:
+                    event["args"] = args
+                with self._lock:
+                    self.events.append(event)
+
+    def chrome_trace(self) -> dict:
+        """The ``chrome://tracing`` / Perfetto JSON document."""
+        return {"traceEvents": sorted(self.events, key=lambda e: e["ts"]),
+                "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f, indent=1)
+        return path
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class TelemetrySink(Protocol):
+    """Anything that accepts flat telemetry records.
+
+    ``emit`` receives one JSON-serializable dict per call (run header,
+    then one record per round/event); ``close`` flushes and releases the
+    underlying resource.  Implementations must tolerate heterogeneous
+    key sets across records.
+    """
+
+    def emit(self, record: dict) -> None: ...
+
+    def close(self) -> None: ...
+
+
+class MemorySink:
+    """Collect records in a list (tests, notebooks)."""
+
+    def __init__(self):
+        self.records: list[dict] = []
+        self.closed = False
+
+    def emit(self, record: dict) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        self.closed = True
+
+
+class JSONLSink:
+    """One JSON object per line — the append-friendly default on disk."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "w")
+
+    def emit(self, record: dict) -> None:
+        self._f.write(json.dumps(record) + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+class CSVSink:
+    """Flat CSV: one row per record, header = union of all record keys.
+
+    Rows are buffered and written on ``close()`` so the header can cover
+    every key seen (the run-header record and the round records carry
+    different key sets).  Array-valued fields (histograms, per-cell
+    vectors) are JSON-encoded into their cell — CSV stays a
+    scalar-friendly summary format; use JSONL for faithful nesting.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._rows: list[dict] = []
+        self._fields: list[str] = []
+        self._closed = False
+
+    def emit(self, record: dict) -> None:
+        flat = {k: (json.dumps(v) if isinstance(v, (list, dict)) else v)
+                for k, v in record.items()}
+        for k in flat:
+            if k not in self._fields:
+                self._fields.append(k)
+        self._rows.append(flat)
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        with open(self.path, "w", newline="") as f:
+            writer = csv.DictWriter(f, fieldnames=self._fields, restval="")
+            writer.writeheader()
+            for row in self._rows:
+                writer.writerow(row)
+
+
+def sink_for_path(path: str) -> TelemetrySink:
+    """Pick a file sink by extension: ``.csv`` -> CSV, else JSONL."""
+    return CSVSink(path) if path.endswith(".csv") else JSONLSink(path)
+
+
+# ---------------------------------------------------------------------------
+# Emission: FleetResult -> per-round records
+# ---------------------------------------------------------------------------
+
+def _jsonable(v: Any):
+    a = np.asarray(v)
+    if a.ndim == 0:
+        return a.item()
+    return a.tolist()
+
+
+def round_records(result, meta: Optional[dict] = None):
+    """Yield the run header then one record per round/event of a
+    ``fleet.FleetResult`` (sinks consume these verbatim).
+
+    The header (``kind: "run"``) carries the mode, round count and any
+    caller ``meta`` (config digest, bench arm, git ref...).  Round
+    records (``kind: "round"``) carry the scalar trajectories plus —
+    when the run had telemetry enabled — that round's histogram /
+    diagnostic summaries as nested lists.
+    """
+    header = {"kind": "run", "mode": result.mode,
+              "rounds": int(np.asarray(result.losses).shape[0]),
+              "bound_final": float(result.bound_final)}
+    if meta:
+        header.update(meta)
+    yield header
+
+    scalars = {
+        "loss": result.losses, "accuracy": result.accuracy,
+        "round_latency": result.latencies, "mean_prune": result.mean_prune,
+        "mean_per": result.mean_per, "participants": result.participants,
+        "wall_clock": result.wall_clock, "staleness": result.staleness,
+    }
+    tel = getattr(result, "telemetry", None) or {}
+    n = int(np.asarray(result.losses).shape[0])
+    for rnd in range(n):
+        rec = {"kind": "round", "round": rnd}
+        for k, v in scalars.items():
+            if v is not None:
+                rec[k] = _jsonable(np.asarray(v)[rnd])
+        for k, v in tel.items():
+            arr = np.asarray(v)
+            # fixed-point diagnostics of an interference solve are per
+            # round when the scan stacked them, scalar otherwise
+            rec[k] = _jsonable(arr[rnd]) if arr.ndim and arr.shape[0] == n \
+                else _jsonable(arr)
+        yield rec
+
+
+def emit_result(result, sink: TelemetrySink, meta: Optional[dict] = None,
+                close: bool = False) -> int:
+    """Emit a run's records through ``sink``; returns the record count."""
+    n = 0
+    for rec in round_records(result, meta=meta):
+        sink.emit(rec)
+        n += 1
+    if close:
+        sink.close()
+    return n

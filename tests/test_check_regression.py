@@ -1,0 +1,155 @@
+"""Perf-regression guardrail (`benchmarks/check_regression.py`): the
+comparison logic, exit codes, and env-drift demotion — all on synthetic
+bench documents, plus a self-diff of the committed baseline."""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+from benchmarks import check_regression as CR  # noqa: E402
+
+
+def doc(env=None):
+    d = {
+        "schema": "fleet_bench/v1",
+        "env": env or {"jax": "0.4.37", "backend": "cpu", "cpu_count": 8},
+        "results": [
+            {"mode": "sync", "kernel": "reference", "clients": 1000,
+             "rounds_per_s": 10.0, "final_loss": 0.50},
+            {"mode": "sync", "kernel": "fused", "clients": 1000,
+             "rounds_per_s": 40.0, "final_loss": 0.50},
+            {"mode": "async", "kernel": "fused", "clients": 1000,
+             "buffer": 250, "rounds_per_s": 30.0, "final_loss": 0.60},
+        ],
+        "speedups": [{"mode": "sync", "clients": 1000, "speedup": 4.0}],
+        "telemetry_overhead": {"clients": 1024, "rounds_per_s_off": 40.0,
+                               "rounds_per_s_on": 38.0,
+                               "overhead_frac": 0.05},
+    }
+    return d
+
+
+def test_identical_documents_pass():
+    failures, _ = CR.compare(doc(), doc())
+    assert failures == []
+
+
+def test_throughput_drop_beyond_rtol_fails():
+    fresh = doc()
+    fresh["results"][0]["rounds_per_s"] = 5.0  # 50% drop > 30% budget
+    failures, _ = CR.compare(doc(), fresh)
+    assert len(failures) == 1 and "rounds/s" in failures[0]
+
+
+def test_throughput_improvement_never_fails():
+    fresh = doc()
+    for r in fresh["results"]:
+        r["rounds_per_s"] *= 3.0
+    failures, _ = CR.compare(doc(), fresh)
+    assert failures == []
+
+
+def test_loss_worsening_fails_and_is_arm_matched():
+    fresh = doc()
+    fresh["results"][2]["final_loss"] = 0.70  # async arm only
+    failures, _ = CR.compare(doc(), fresh)
+    assert len(failures) == 1
+    assert "final loss" in failures[0] and "async" in failures[0]
+
+
+def test_speedup_drop_fails():
+    fresh = doc()
+    fresh["speedups"][0]["speedup"] = 1.5  # 62% drop > 35% budget
+    failures, _ = CR.compare(doc(), fresh)
+    assert len(failures) == 1 and failures[0].startswith("speedup")
+
+
+def test_overhead_budget():
+    fresh = doc()
+    fresh["telemetry_overhead"]["overhead_frac"] = 0.25
+    failures, _ = CR.compare(doc(), fresh)
+    assert len(failures) == 1 and "telemetry overhead" in failures[0]
+    ok, notes = CR.compare(doc(), doc())
+    assert any("telemetry overhead" in n for n in notes)
+
+
+def test_one_sided_arms_note_but_dont_fail():
+    fresh = doc()
+    fresh["results"].pop()  # async arm not re-run
+    fresh["results"].append({"mode": "sync", "kernel": "fused",
+                             "clients": 9, "rounds_per_s": 1.0})
+    failures, notes = CR.compare(doc(), fresh)
+    assert failures == []
+    assert any("baseline-only" in n for n in notes)
+    assert any("new arm" in n for n in notes)
+
+
+def test_no_shared_arms_is_a_failure():
+    fresh = doc()
+    for r in fresh["results"]:
+        r["clients"] = 77
+    failures, _ = CR.compare(doc(), fresh)
+    assert any("no shared" in f for f in failures)
+
+
+def test_env_drift_detection():
+    assert CR.compare_env(doc(), doc()) == []
+    drift = CR.compare_env(doc(), doc(env={"jax": "0.5.0",
+                                           "backend": "cpu",
+                                           "cpu_count": 8}))
+    assert len(drift) == 1 and "jax" in drift[0]
+    assert CR.compare_env({"results": []}, doc()) == []  # pre-env baseline
+
+
+def _write(tmp_path, name, d):
+    p = os.path.join(tmp_path, name)
+    with open(p, "w") as fh:
+        json.dump(d, fh)
+    return p
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", doc())
+    fresh_ok = _write(tmp_path, "ok.json", doc())
+    assert CR.main([fresh_ok, "--baseline", base]) == 0
+
+    bad = doc()
+    bad["results"][0]["rounds_per_s"] = 1.0
+    fresh_bad = _write(tmp_path, "bad.json", bad)
+    assert CR.main([fresh_bad, "--baseline", base]) == 1
+
+    broken = os.path.join(tmp_path, "broken.json")
+    with open(broken, "w") as fh:
+        fh.write("{nope")
+    assert CR.main([broken, "--baseline", base]) == 2
+    capsys.readouterr()
+
+
+def test_env_drift_demotes_timing_but_not_loss(tmp_path, capsys):
+    base = _write(tmp_path, "base.json", doc())
+    slow = doc(env={"jax": "0.4.37", "backend": "cpu", "cpu_count": 2})
+    slow["results"][0]["rounds_per_s"] = 1.0  # timing: demoted
+    p = _write(tmp_path, "slow.json", slow)
+    assert CR.main([p, "--baseline", base]) == 0
+    assert "env-demoted" in capsys.readouterr().out
+    # --strict-env restores the failure
+    assert CR.main([p, "--baseline", base, "--strict-env"]) == 1
+    capsys.readouterr()
+    # loss drift is code drift, not hardware drift: never demoted
+    worse = copy.deepcopy(slow)
+    worse["results"][0]["rounds_per_s"] = 10.0
+    worse["results"][0]["final_loss"] = 2.0
+    p2 = _write(tmp_path, "worse.json", worse)
+    assert CR.main([p2, "--baseline", base]) == 1
+    capsys.readouterr()
+
+
+def test_committed_baseline_self_diff_passes(capsys):
+    if not os.path.exists(CR.BASELINE):
+        pytest.skip("no committed baseline")
+    assert CR.main([CR.BASELINE]) == 0
+    capsys.readouterr()

@@ -1,0 +1,164 @@
+"""Engine metric contracts: scan key-set stability across modes, the
+``eval_`` prefix rule, and — the observability cardinal rule — that
+telemetry off is *bit-identical* to the pre-telemetry engine across
+sync/async and reference/fused kernels."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
+                         HexInterference, MemorySink, TelemetryConfig,
+                         run_fleet)
+from repro.fleet.engine import build_simulation, _merge_eval
+
+CORE_KEYS = {"loss", "accuracy", "round_latency", "deadline", "mean_prune",
+             "mean_per", "participants", "bandwidth_util", "learning_cost"}
+ASYNC_EXTRA = {"sim_time", "staleness"}
+
+
+def tiny(rounds=3, clients_per_cell=4, **kw):
+    return FleetConfig(
+        topology=FleetTopology(num_cells=2,
+                               clients_per_cell=clients_per_cell),
+        rounds=rounds, **kw)
+
+
+def raw_keys(cfg, mode):
+    sim = build_simulation(cfg, mode=mode)
+    _, metrics = sim.simulate(sim.params, sim.round_keys)
+    return set(metrics)
+
+
+# ---------------------------------------------------------------------------
+# key-set stability
+# ---------------------------------------------------------------------------
+
+def test_sync_scan_keys_are_the_core_set():
+    assert raw_keys(tiny(), "sync") == CORE_KEYS
+
+
+def test_two_tier_scan_keys_match_single_tier():
+    assert raw_keys(tiny(cloud_period=2), "sync") == raw_keys(tiny(), "sync")
+
+
+def test_async_scan_keys_are_sync_plus_time_and_staleness():
+    assert raw_keys(tiny(), "async") == CORE_KEYS | ASYNC_EXTRA
+
+
+def test_telemetry_keys_all_carry_scan_prefix():
+    on = raw_keys(tiny(telemetry=TelemetryConfig()), "sync")
+    assert {k for k in on - CORE_KEYS} \
+        == {k for k in on if k.startswith("tel_")}
+    assert on - CORE_KEYS  # telemetry on actually adds keys
+
+
+def test_eval_prefix_rule():
+    """Extra task eval metrics ride under ``eval_``; "accuracy" is the one
+    required bare key."""
+    class Task:
+        @staticmethod
+        def eval_metrics(state, params):
+            return {"accuracy": 0.5, "perplexity": 7.0}
+    out = _merge_eval({"loss": 1.0}, Task(), None, None)
+    assert out == {"loss": 1.0, "accuracy": 0.5, "eval_perplexity": 7.0}
+
+
+# ---------------------------------------------------------------------------
+# telemetry-off bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+@pytest.mark.parametrize("kernel", ["reference", "fused"])
+def test_telemetry_off_is_bit_identical(mode, kernel):
+    kw = dict(kernel=kernel)
+    if mode == "async":
+        kw["async_config"] = AsyncConfig(buffer_size=3)
+    off = run_fleet(tiny(**kw), mode=mode)
+    on = run_fleet(tiny(telemetry=TelemetryConfig(), **kw), mode=mode)
+    assert off.telemetry is None and on.telemetry is not None
+    np.testing.assert_array_equal(off.losses, on.losses)
+    np.testing.assert_array_equal(off.latencies, on.latencies)
+    for a, b in zip(jax.tree.leaves(off.params), jax.tree.leaves(on.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_default_config_has_no_telemetry_payload():
+    res = run_fleet(tiny())
+    assert res.telemetry is None
+
+
+# ---------------------------------------------------------------------------
+# telemetry payload shape / semantics
+# ---------------------------------------------------------------------------
+
+def test_sync_histogram_mass_equals_clients_per_cell():
+    cfg = tiny(rounds=3, clients_per_cell=8, telemetry=TelemetryConfig())
+    tel = run_fleet(cfg).telemetry
+    for name in ("per_hist", "rho_hist", "bw_hist", "latency_hist",
+                 "sinr_hist"):
+        h = np.asarray(tel[name])
+        assert h.shape == (3, 2, 16)  # (rounds, cells, bins)
+        np.testing.assert_allclose(h.sum(axis=-1), 8.0, rtol=1e-5)
+    assert tel["grad_norm"].shape == (3,)
+    assert np.all(tel["grad_norm"] >= 0.0)
+    assert np.all((tel["mask_density"] >= 0.0) & (tel["mask_density"] <= 1.0))
+
+
+def test_async_telemetry_adds_staleness_hist():
+    cfg = tiny(telemetry=TelemetryConfig(staleness_bins=6),
+               async_config=AsyncConfig(buffer_size=3))
+    tel = run_fleet(cfg, mode="async").telemetry
+    assert tel["staleness_hist"].shape == (3, 6)
+    # every merged contribution lands in exactly one staleness bin
+    assert np.all(np.asarray(tel["staleness_hist"]).sum(axis=-1) > 0.0)
+
+
+def test_interference_fixed_point_diagnostics_surface():
+    """fp_* keys need co-channel coupling: reuse=1 with >= 2 cells (any
+    isolated reuse short-circuits the fixed point entirely)."""
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=3, clients_per_cell=4),
+        geometry=HexInterference(reuse=1), rounds=2,
+        telemetry=TelemetryConfig())
+    tel = run_fleet(cfg).telemetry
+    fp_it = np.asarray(tel["fp_iterations"])
+    resid = np.asarray(tel["fp_residuals"])
+    # one joint fixed point couples all cells -> per-round diagnostics
+    assert fp_it.shape == (2,)
+    assert np.all(fp_it >= 1)
+    assert resid.shape == (2, cfg.solver.fp_iters)
+    # residual trajectory is NaN-padded past the realized iteration count
+    realized = (~np.isnan(resid)).sum(axis=-1)
+    np.testing.assert_array_equal(realized, fp_it)
+    assert np.all(np.asarray(tel["fp_residual"]) >= 0.0)
+
+
+def test_solver_flag_off_drops_solver_keys_only():
+    on = run_fleet(tiny(telemetry=TelemetryConfig())).telemetry
+    off = run_fleet(tiny(telemetry=TelemetryConfig(solver=False))).telemetry
+    assert set(on) - set(off) == {"solver_iters"}
+
+
+def test_gradients_flag_off_drops_drift_keys_only():
+    on = run_fleet(tiny(telemetry=TelemetryConfig())).telemetry
+    off = run_fleet(
+        tiny(telemetry=TelemetryConfig(gradients=False))).telemetry
+    assert set(on) - set(off) == {"grad_norm", "mask_density"}
+
+
+# ---------------------------------------------------------------------------
+# sink integration
+# ---------------------------------------------------------------------------
+
+def test_sink_receives_header_plus_one_record_per_round():
+    sink = MemorySink()
+    res = run_fleet(tiny(rounds=3, telemetry=TelemetryConfig()), sink=sink)
+    assert len(sink.records) == 4
+    head, rounds = sink.records[0], sink.records[1:]
+    assert head["kind"] == "run" and head["rounds"] == 3
+    assert [r["round"] for r in rounds] == [0, 1, 2]
+    np.testing.assert_allclose([r["loss"] for r in rounds], res.losses,
+                               rtol=1e-6)
+    assert "per_hist" in rounds[0]  # telemetry rows ride along per round
