@@ -37,7 +37,10 @@ BASELINE = os.path.join(os.path.dirname(__file__), "results",
                         "BENCH_fleet.json")
 
 # keys that identify "the same arm" across two bench documents
-ARM_KEYS = ("mode", "kernel", "clients", "buffer")
+# ("cohort" distinguishes the cohort-gather arms of fleet_bench --cohort
+# from the full-participation sweep at the same client count; records
+# that predate the key carry None on both sides and keep matching)
+ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort")
 
 
 def arm_id(record: dict) -> tuple:
@@ -49,6 +52,8 @@ def arm_label(record: dict) -> str:
              f"@{record.get('clients', '?')}"]
     if record.get("buffer"):
         parts.append(f"buf={record['buffer']}")
+    if record.get("cohort") is not None:
+        parts.append("cohort" if record["cohort"] else "fleet-scan")
     return " ".join(parts)
 
 

@@ -52,7 +52,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.fleet import (AsyncConfig, FleetConfig, FleetTopology,
-                         SpanRecorder, TelemetryConfig)
+                         ScheduleConfig, SpanRecorder, TelemetryConfig)
 from repro.fleet.engine import build_simulation, time_to_loss
 from repro.fleet.topology import GEOMETRIES, make_geometry
 
@@ -131,6 +131,106 @@ def bench_one(clients: int, rounds: int, kernel: str = "reference",
         "client_rounds_per_s": clients * rounds / warm,
         "final_loss": float(res.losses[-1]),
     }
+
+
+def bench_cohort(clients: int, rounds: int, cohort: bool,
+                 participation: float = 0.1, kernel: str = "reference",
+                 seed: int = 0, repeats: int = 2,
+                 control_chunk: int | None = None,
+                 recorder: SpanRecorder | None = None) -> dict:
+    """One cohort-compute arm: a partial schedule (``participation`` of
+    each cell) with the cohort gather on or off, same seed and draws.
+
+    ``cohort=True`` is the dense (C, m) compute path — gradient batch and
+    gathered per-cell solve scale with the scheduled cohort;
+    ``cohort=False`` pins the legacy full-fleet masked scan on the
+    identical schedule.  The rounds/s ratio of the two arms is the
+    cohort-sharding payoff the acceptance gate cares about (>= 3x at 10k
+    clients, participation 0.1).  ``control_chunk`` defaults to blocks of
+    512 cells once the fleet is larger than that (the Algorithm-1
+    working-set bound that keeps the 1M-client control pass in budget).
+    """
+    cells, per_cell = _fleet_shape(clients)
+    m = max(1, int(round(per_cell * participation)))
+    if control_chunk is None:
+        control_chunk = 512 if cells > 512 else 0
+    batch_cols = m if cohort else per_cell
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=cells, clients_per_cell=per_cell),
+        schedule=ScheduleConfig(participation="uniform",
+                                participants_per_cell=m),
+        rounds=rounds, seed=seed, kernel=kernel, cohort_gather=cohort,
+        cell_chunk=max(1, min(cells, 4096 // max(batch_cols, 1))),
+        control_chunk=control_chunk)
+
+    with _span(recorder, "bench_cohort", clients=clients, cohort=cohort,
+               kernel=kernel):
+        with _span(recorder, "build"):
+            sim = build_simulation(cfg)
+        compile_s, warm, out = _time_simulation(sim, repeats,
+                                                recorder=recorder)
+        with _span(recorder, "finalize"):
+            res = sim.finalize(*out)
+
+    assert np.all(np.isfinite(res.losses)), "non-finite losses (cohort)"
+    return {
+        "mode": "sync",
+        "kernel": kernel,
+        "clients": clients,
+        "cells": cells,
+        "rounds": rounds,
+        "cohort": bool(cohort),
+        "participation": participation,
+        "cohort_m": m,
+        "control_chunk": control_chunk,
+        "compile_s": compile_s,
+        "run_s": warm,
+        "rounds_per_s": rounds / warm,
+        "client_rounds_per_s": clients * rounds / warm,
+        "cohort_client_rounds_per_s": cells * m * rounds / warm,
+        "final_loss": float(res.losses[-1]),
+    }
+
+
+# above this, the full-fleet masked-scan arm is skipped: a 1M-client
+# dense scan on one host exists only to be slower than the cohort path,
+# and the equivalence suite already pins the two paths' trajectories
+_MAX_FLEET_SCAN_CLIENTS = 100_000
+
+
+def run_cohort(counts: list[int], rounds: int, kernel: str,
+               participation: float, repeats: int,
+               recorder: SpanRecorder | None = None) -> list[dict]:
+    """The --cohort table: cohort-gather vs full-fleet scan on the same
+    partial schedule, plus cohort-only points past the scan ceiling."""
+    header = ["mode", "kernel", "clients", "cells", "rounds", "cohort",
+              "participation", "cohort_m", "control_chunk", "compile_s",
+              "run_s", "rounds_per_s", "client_rounds_per_s",
+              "cohort_client_rounds_per_s", "final_loss"]
+    rows, records = [], []
+    for clients in counts:
+        arms = {}
+        variants = ([False, True] if clients <= _MAX_FLEET_SCAN_CLIENTS
+                    else [True])
+        for cohort in variants:
+            r = bench_cohort(clients, rounds, cohort, kernel=kernel,
+                             participation=participation, repeats=repeats,
+                             recorder=recorder)
+            arms[cohort] = r
+            records.append(r)
+            rows.append([r[h] for h in header])
+            tag = "cohort" if cohort else "fleet-scan"
+            print(f"{tag:>11s} clients={clients:>8d} cells={r['cells']:>5d} "
+                  f"m={r['cohort_m']:>4d} compile={r['compile_s']:6.1f}s "
+                  f"run={r['run_s']:8.2f}s {r['rounds_per_s']:8.2f} rounds/s")
+        if False in arms and True in arms:
+            ratio = (arms[True]["rounds_per_s"]
+                     / arms[False]["rounds_per_s"])
+            print(f"      cohort/fleet-scan @ {clients} clients "
+                  f"(participation {participation}): {ratio:.2f}x")
+    path = common.write_csv("fleet_cohort_bench.csv", header, rows)
+    print(f"wrote {path}")
+    return records
 
 
 def bench_telemetry_overhead(clients: int, rounds: int, seed: int = 0,
@@ -240,6 +340,10 @@ def _speedups(records: list[dict]) -> list[dict]:
     """fused-over-reference rounds/sec ratio per (mode, clients)."""
     by_key = {}
     for r in records:
+        if r.get("cohort") is not None:
+            continue  # cohort arms run one kernel on a partial schedule —
+            # pairing them with the full-participation sweep would corrupt
+            # the fused/reference ratio at the same client count
         by_key.setdefault((r["mode"], r["clients"]), {})[r["kernel"]] = r
     out = []
     for (mode, clients), arms in sorted(by_key.items()):
@@ -269,10 +373,26 @@ def env_metadata() -> dict:
     }
 
 
+# mirror of check_regression.ARM_KEYS: what identifies "the same arm"
+_ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort")
+
+
 def write_json(records: list[dict], path: str | None = None,
-               extra: dict | None = None) -> str:
+               extra: dict | None = None, merge: bool = False) -> str:
     os.makedirs(common.RESULTS_DIR, exist_ok=True)
     path = path or os.path.join(common.RESULTS_DIR, JSON_NAME)
+    if merge and os.path.exists(path):
+        # fold the fresh arms into the existing document: same-arm records
+        # are replaced, everything else is preserved (the committed bench
+        # trajectory grows, it doesn't reset)
+        with open(path) as f:
+            old = json.load(f)
+        fresh = {tuple(r.get(k) for k in _ARM_KEYS) for r in records}
+        kept = [r for r in old.get("results", [])
+                if tuple(r.get(k) for k in _ARM_KEYS) not in fresh]
+        records = kept + records
+        if extra is None and "telemetry_overhead" in old:
+            extra = {"telemetry_overhead": old["telemetry_overhead"]}
     doc = {
         "schema": "fleet_bench/v1",
         "created_unix": time.time(),
@@ -446,6 +566,14 @@ def main() -> None:
                          "--json defaults to both)")
     ap.add_argument("--compare", action="store_true",
                     help="sync vs async buffered aggregation comparison")
+    ap.add_argument("--cohort", action="store_true",
+                    help="cohort-gather vs full-fleet masked scan on a "
+                         "partial schedule (default 10000 clients; counts "
+                         f"above {_MAX_FLEET_SCAN_CLIENTS} run the cohort "
+                         "arm only); --json merges the arms into "
+                         f"{JSON_NAME} instead of overwriting it")
+    ap.add_argument("--participation", type=float, default=0.1,
+                    help="--cohort: scheduled fraction of each cell")
     ap.add_argument("--geometry", default=None, metavar="GEOMS",
                     help="comma-separated cell geometries to benchmark "
                          "(e.g. 'orthogonal,hex'): rounds/s + simulated "
@@ -490,6 +618,21 @@ def main() -> None:
         run_geometry(clients, rounds, args.geometry.split(","),
                      [int(r) for r in args.reuse.split(",")],
                      args.target_loss, args.repeats)
+        if recorder is not None:
+            print(f"wrote {recorder.write(args.trace)}")
+        return
+
+    if args.cohort:
+        if args.smoke:
+            counts, rounds = [256], 3
+        else:
+            counts = ([10000] if args.clients == "5,100,1000,10000"
+                      else [int(c) for c in args.clients.split(",")])
+            rounds = args.rounds
+        records = run_cohort(counts, rounds, kernels[0], args.participation,
+                             args.repeats, recorder=recorder)
+        if emit_json:
+            print(f"wrote {write_json(records, json_path, merge=True)}")
         if recorder is not None:
             print(f"wrote {recorder.write(args.trace)}")
         return

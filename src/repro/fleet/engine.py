@@ -58,10 +58,23 @@ per-layer tile grids (``FleetTask.tile_grid``) — either way compute never
 materializes the (clients, params) gradient batch.  See docs/fleet.md.
 
 Sharding: pass a mesh from ``launch.mesh`` and the cell axis of every
-population/fading tensor is placed on the mesh's "data" axis
-(NamedSharding); inside the round the flattened *client* axis of the
-gradient batch is additionally constrained to "data", so XLA partitions
-the per-client work across devices in both layouts.
+population/fading tensor is placed on the mesh's cell axis — "cells" on
+a two-axis fleet mesh (``make_fleet_mesh``; the client axis of (C, I)
+arrays then also shards over "data"), or "data" on the legacy
+single-axis mesh (NamedSharding); inside the round the flattened
+*client* axis of the gradient batch is constrained to "data" and the
+solver's per-cell batch to the cell axis, so XLA partitions control and
+gradient work across devices in both layouts.
+
+Cohort compute: with a partial schedule (or ``cohort_gather=True``) the
+control pass emits the schedule as a dense (C, m) index batch
+(``scheduler.participation_cohort`` — same single Gumbel draw as the
+mask) and the engine gathers weights, pruning rates and client batches
+along it before the gradient pass, so the hot path — and the
+interference-free Algorithm-1 solve, which runs over the gathered
+cohort and scatters back — scales with m, not I.
+``FleetConfig.control_chunk`` additionally blocks the solve over cells,
+bounding the control pass's working set at million-client fleets.
 """
 
 from __future__ import annotations
@@ -135,6 +148,29 @@ class FleetConfig:
     test_samples: int = 512
     # gradient accumulation: cells per scan chunk (0 = whole fleet at once)
     cell_chunk: int = 0
+    # Cohort compute: gather the scheduled clients into a dense (C, m)
+    # batch before the gradient pass (and route the per-cell solver over
+    # the gathered cohort when the cells are interference-free), so the
+    # hot path scales with cohort size instead of fleet size.  None =
+    # auto: on exactly when the schedule is partial.  True forces the
+    # gather (a full schedule then gathers the identity cohort — same
+    # values in the same order); False pins the legacy full-fleet masked
+    # scan.  The schedule draw itself is shared
+    # (scheduler.participation_cohort ranks the same single Gumbel
+    # tensor), so all control randomness is unchanged; gathered gradient
+    # sums reassociate float addition, which is why partial-participation
+    # trajectories match the legacy path to ~1e-6 under x64 rather than
+    # bitwise (tests/test_cohort_equivalence.py pins the matrix).
+    cohort_gather: Optional[bool] = None
+    # Control-pass chunking: cells per solver block (0 = all cells in one
+    # vmap).  Bounds the Algorithm-1 working set (the solver's while_loop
+    # temporaries are the control pass's memory peak at 1M clients);
+    # random draws stay full-shape and frozen solver lanes are
+    # idempotent, so chunked solves are bit-identical to the global vmap.
+    # Ignored when an interference graph couples the cells (the damped
+    # SINR fixed point is global by construction) or when a custom
+    # solve_fn is plugged in.
+    control_chunk: int = 0
     # client-gradient hot path: "reference" is the vmap + AD batch;
     # "fused" runs the task's fused kernel hook (the MLP task streams
     # tiles of clients through kernels/fleet_fused.py and never
@@ -367,7 +403,7 @@ def _constrain_clients(tree, mesh):
 
 def _fleet_grads(task: TASK.FleetTask, params: PyTree, rho: jnp.ndarray,
                  agg_w: jnp.ndarray, sched_w: jnp.ndarray, batch_fn,
-                 cfg: FleetConfig, data=None, mesh=None):
+                 cfg: FleetConfig, data=None, mesh=None, cohort=None):
     """Weighted-sum gradients over the fleet, cell-chunked.
 
     Returns (grad_wsum pytree, sum agg_w, mean scheduled loss).  agg_w is
@@ -380,20 +416,40 @@ def _fleet_grads(task: TASK.FleetTask, params: PyTree, rho: jnp.ndarray,
     client tiles through ``task.kernel_grads`` so only the accumulated sum
     is ever materialized.
 
+    ``cohort`` (the control pass's (C, m) scheduled index batch) gathers
+    every per-client input — weights, pruning rates, cached batches, or
+    the streaming batch indices — into the dense cohort batch *before*
+    the chunk scan, so local training, the fused kernels' client axis and
+    the Eq.-(5) reduction all run over C*m clients instead of C*I.
+    Unscheduled clients carry zero aggregation weight, so dropping them
+    changes only the association of the float sums (~1e-6 under x64).
+
     ``data`` is the optional cached batch pytree from ``_make_batch_fn``
     — when present, batches ride the chunk scan as contiguous slices
     (a general gather over a 100 MB table thrashes caches at 100k+
-    clients); otherwise ``batch_fn`` regenerates them per chunk.
+    clients; the cohort path gathers m/I of the rows up front instead);
+    otherwise ``batch_fn`` regenerates them per chunk — on the cohort
+    path only the scheduled clients' batches are ever derived.
     """
     c, i = rho.shape
-    chunk = cfg.cell_chunk if 0 < cfg.cell_chunk < c else c
     idx = jnp.arange(c * i, dtype=jnp.int32).reshape(rho.shape)
+    if cohort is not None:
+        take = lambda a: jnp.take_along_axis(a, cohort, axis=-1)
+        idx, rho = take(idx), take(rho)
+        agg_w, sched_w = take(agg_w), take(sched_w)
+        i = cohort.shape[-1]
+    chunk = cfg.cell_chunk if 0 < cfg.cell_chunk < c else c
 
     arrays = [idx, rho, agg_w, sched_w]
     data_def = None
     if data is not None:
         data_leaves, data_def = jax.tree_util.tree_flatten(data)
-        arrays += [a.reshape((c, i) + a.shape[1:]) for a in data_leaves]
+        if cohort is not None:
+            flat = idx.reshape(-1)
+            arrays += [a[flat].reshape((c, i) + a.shape[1:])
+                       for a in data_leaves]
+        else:
+            arrays += [a.reshape((c, i) + a.shape[1:]) for a in data_leaves]
 
     def batches(c_idx, extra):
         if extra:
@@ -434,6 +490,17 @@ def _fleet_grads(task: TASK.FleetTask, params: PyTree, rho: jnp.ndarray,
     return g_wsum, w_sum, mean_loss
 
 
+def _cohort_enabled(cfg: FleetConfig) -> bool:
+    """Resolve ``cfg.cohort_gather``: auto (None) turns the cohort path on
+    exactly when the schedule is partial — the only case where the gather
+    shrinks the compute batch."""
+    if cfg.cohort_gather is not None:
+        return bool(cfg.cohort_gather)
+    s = cfg.schedule
+    return (s.participation != "full"
+            and 0 < s.participants_per_cell < cfg.topology.clients_per_cell)
+
+
 class RoundControl(NamedTuple):
     """One key's worth of per-round system state, identical for both modes:
     channel draw, schedule draw, solver output, realized latencies."""
@@ -447,10 +514,55 @@ class RoundControl(NamedTuple):
     # realized per-client uplink SINR in dB — only computed under
     # telemetry (the SINR histogram's input); None otherwise
     sinr_db: Optional[jnp.ndarray] = None
+    # (C, m) scheduled client indices (ascending per cell) when the
+    # cohort path is on — the gradient pass gathers its dense compute
+    # batch along these; None on the legacy full-fleet path
+    cohort: Optional[jnp.ndarray] = None
+
+
+def _solve_cells_chunked(chunk: int, h_up, num_samples, cpu_hz, tx_power,
+                         max_prune, m_round, mask, cap, **kw):
+    """``SOLVER.solve_fleet`` over consecutive blocks of cells.
+
+    Full ``chunk``-sized blocks run under one ``lax.map``; a ragged
+    remainder runs as one exact-sized call.  The cells are independent
+    (no interference here — the caller guards that) and frozen Algorithm-1
+    lanes are idempotent under extra iterations, so the concatenated
+    solutions are bit-identical to the single global vmap; only the
+    solver's peak working set changes (``chunk`` cells instead of C).
+    """
+    arrays = [h_up, num_samples, cpu_hz, tx_power, max_prune, m_round, mask]
+    has_cap = cap is not None
+    if has_cap:
+        arrays.append(cap)
+
+    def solve_block(blk):
+        blk = list(blk)
+        cap_b = blk.pop() if has_cap else None
+        return SOLVER.solve_fleet(blk[0], blk[1], blk[2], blk[3], blk[4],
+                                  blk[5], blk[6], cap_b, **kw)
+
+    c = h_up.shape[0]
+    chunk = min(chunk, c)
+    n_full = c // chunk
+    rem = c - n_full * chunk
+    parts = []
+    if n_full:
+        stacked = tuple(
+            a[:n_full * chunk].reshape((n_full, chunk) + a.shape[1:])
+            for a in arrays)
+        mapped = jax.lax.map(solve_block, stacked)
+        parts.append(jax.tree.map(
+            lambda a: a.reshape((n_full * chunk,) + a.shape[2:]), mapped))
+    if rem:
+        parts.append(solve_block(tuple(a[n_full * chunk:] for a in arrays)))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
 
 
 def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
-                     solve_fn=None):
+                     solve_fn=None, mesh=None):
     """Build the per-key control pass shared by the sync round and the
     async start/restart: channel -> schedule -> solver -> latency -> packet
     draws.  Both modes consume keys in the same order, which is what makes
@@ -461,6 +573,16 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     runs its damped SINR fixed point (still inside this one traced
     function — the engine stays a single scan) and the realized uplink
     latencies price the converged interference PSD.
+
+    On the cohort path (``_cohort_enabled``) the schedule is also emitted
+    as a dense (C, m) index batch; interference-free fleets then run the
+    Algorithm-1 solve over the *gathered* cohort arrays and scatter the
+    solution back, with non-cohort clients taking exactly the fill the
+    full solve gives non-participants (rho = 0, B = 0, q = 0 — so
+    everything downstream of the solver, including the packet draw
+    shapes, is unchanged).  ``cfg.control_chunk`` further blocks the
+    solve over cells so the solver's working set stays bounded at
+    million-client fleets (bit-identical: frozen lanes are idempotent).
 
     ``solve_fn(h_up, mask, m_round, cap, interference) -> CellSolution``
     swaps the on-device vmapped solver for another implementation — the
@@ -473,6 +595,7 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
     n0, b_hz = w.noise_psd_w_per_hz, w.bandwidth_hz
     geo = resolve_geometry(cfg)
     tcfg = cfg.telemetry
+    use_cohort = _cohort_enabled(cfg)
 
     def control(rkey: jax.Array) -> RoundControl:
         k_fade, k_part, k_strag, k_arr = jax.random.split(rkey, 4)
@@ -480,7 +603,13 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
         with jax.named_scope("fleet.channel"):
             chan = geo.round_channel(k_fade, pop, cfg.topology)
         h_up, h_down = chan.h_up, chan.h_down
-        mask = SCHED.participation_mask(k_part, cfg.schedule, pop.num_samples)
+        if use_cohort:
+            mask, cohort = SCHED.participation_cohort(
+                k_part, cfg.schedule, pop.num_samples)
+        else:
+            mask = SCHED.participation_mask(k_part, cfg.schedule,
+                                            pop.num_samples)
+            cohort = None
         ho = SCHED.handover_mask(chan.served_home, cfg.schedule)
         if ho is not None:
             mask = mask * ho
@@ -503,18 +632,56 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
             cap = jnp.maximum(cfg.schedule.round_deadline_s
                               - w.aggregation_latency_s - t_d[..., 0], 0.0)
 
+        solve_kw = dict(
+            bandwidth_hz=b_hz, noise_psd=n0, waterfall_m0=w.waterfall_m0,
+            model_bits=w.model_bits, cycles_per_sample=w.cycles_per_sample,
+            weight=cfg.weight, solver=cfg.solver)
+        gathered = (use_cohort and solve_fn is None
+                    and chan.interference is None
+                    and cohort.shape[-1] < mask.shape[-1])
         with jax.named_scope("fleet.solve"):
-            if solve_fn is None:
+            if solve_fn is not None:
+                sol = solve_fn(h_up, mask, m_round, cap, chan.interference)
+            elif gathered:
+                # Solve the dense cohort system: the per-cell vertex walk
+                # and bandwidth inversion run over m gathered clients, not
+                # the whole census.  The solver treats masked-out clients
+                # as inert exactly (rho = B = q = 0, breakpoints at +inf),
+                # so scattering those fills back reproduces the full
+                # solve's fleet-shaped fields; per-cell reductions
+                # (deadline, inner cost) reassociate float sums, hence the
+                # cohort path's ~1e-6 (not bitwise) equivalence.
+                takec = lambda a: jnp.take_along_axis(a, cohort, axis=-1)
+                args_c = (takec(h_up), takec(pop.num_samples),
+                          takec(pop.cpu_hz), takec(pop.tx_power),
+                          takec(pop.max_prune), m_round, takec(mask), cap)
+                if 0 < cfg.control_chunk < mask.shape[0]:
+                    sol_c = _solve_cells_chunked(cfg.control_chunk, *args_c,
+                                                 **solve_kw)
+                else:
+                    sol_c = SOLVER.solve_fleet(*args_c, **solve_kw)
+                rows = jnp.arange(mask.shape[0])[:, None]
+
+                def scat(v):
+                    full = jnp.zeros(mask.shape, v.dtype)
+                    return full.at[rows, cohort].set(v)
+
+                sol = sol_c._replace(prune=scat(sol_c.prune),
+                                     bandwidth=scat(sol_c.bandwidth),
+                                     per=scat(sol_c.per))
+            elif (0 < cfg.control_chunk < mask.shape[0]
+                  and chan.interference is None):
+                sol = _solve_cells_chunked(
+                    cfg.control_chunk, h_up, pop.num_samples, pop.cpu_hz,
+                    pop.tx_power, pop.max_prune, m_round, mask, cap,
+                    **solve_kw)
+            else:
                 sol = SOLVER.solve_fleet(
                     h_up, pop.num_samples, pop.cpu_hz, pop.tx_power,
-                    pop.max_prune, m_round, mask, cap, bandwidth_hz=b_hz,
-                    noise_psd=n0, waterfall_m0=w.waterfall_m0,
-                    model_bits=w.model_bits,
-                    cycles_per_sample=w.cycles_per_sample, weight=cfg.weight,
-                    solver=cfg.solver, interference=chan.interference,
-                    diagnostics=tcfg is not None and tcfg.solver)
-            else:
-                sol = solve_fn(h_up, mask, m_round, cap, chan.interference)
+                    pop.max_prune, m_round, mask, cap,
+                    interference=chan.interference,
+                    diagnostics=tcfg is not None and tcfg.solver,
+                    mesh=mesh, **solve_kw)
 
         # Realized per-client latency (Eq. 4 terms, broadcast over cells);
         # with interference the realized uplink rate prices the solver's
@@ -543,7 +710,7 @@ def _make_control_fn(cfg: FleetConfig, pop: TOPO.ClientPopulation,
                     >= sol.per).astype(jnp.result_type(float))
         return RoundControl(mask=mask, strag=strag, arrivals=arrivals,
                             sol=sol, t_client=t_client, m_round=m_round,
-                            sinr_db=sinr_db)
+                            sinr_db=sinr_db, cohort=cohort)
 
     return control
 
@@ -622,7 +789,7 @@ def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
         with jax.named_scope("fleet.gradient"):
             g_wsum, w_sum, mean_loss = _fleet_grads(
                 task, params, sol.prune, agg_w, mask, batch_fn, cfg,
-                data=data, mesh=mesh)
+                data=data, mesh=mesh, cohort=ctl.cohort)
         denom = jnp.where(w_sum > 0, w_sum, 1.0)
         with jax.named_scope("fleet.merge"):
             new_params = jax.tree.map(
@@ -649,7 +816,7 @@ def _make_apply_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
 def _make_round_fn(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
                    pop: TOPO.ClientPopulation, data_key: jax.Array,
                    mesh=None):
-    control = _make_control_fn(cfg, pop)
+    control = _make_control_fn(cfg, pop, mesh=mesh)
     batch_fn, data = _make_batch_fn(task, state, cfg, data_key)
     apply_round = _make_apply_round_fn(cfg, task, state, pop, batch_fn, data,
                                        mesh=mesh)
@@ -730,7 +897,7 @@ def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
             "the mesh; the mesh placement of population tensors still "
             "applies but per-round compute stays serial over cells.",
             stacklevel=3)
-    control = _make_control_fn(cfg, pop)
+    control = _make_control_fn(cfg, pop, mesh=mesh)
     batch_fn, data = _make_batch_fn(task, state, cfg, data_key)
     w = cfg.wireless
     c, i = cfg.topology.shape
@@ -768,10 +935,24 @@ def _make_two_tier_round_fn(cfg: FleetConfig, task: TASK.FleetTask,
         ctl = control(rkey)
         active, arrivals, agg_w = _round_activity(cfg, pop, ctl)
 
+        # Cohort path: each cell's scan slice carries only its m scheduled
+        # clients — the edge tier's per-cell gradient work scales with the
+        # cohort exactly like the single-tier chunk scan.
+        rho_r, schedw_r = ctl.sol.prune, ctl.mask
+        idx_r, aggw_r, cells_r = idx, agg_w, data_cells
+        if ctl.cohort is not None:
+            take = lambda a: jnp.take_along_axis(a, ctl.cohort, axis=-1)
+            idx_r, rho_r = take(idx), take(rho_r)
+            aggw_r, schedw_r = take(aggw_r), take(schedw_r)
+            m = ctl.cohort.shape[-1]
+            flat = idx_r.reshape(-1)
+            cells_r = [a.reshape((c * i,) + a.shape[2:])[flat]
+                       .reshape((c, m) + a.shape[2:]) for a in data_cells]
+
         with jax.named_scope("fleet.gradient"):
             _, cell_out = jax.lax.scan(
                 cell_body, None,
-                (edge, idx, ctl.sol.prune, agg_w, ctl.mask, *data_cells))
+                (edge, idx_r, rho_r, aggw_r, schedw_r, *cells_r))
         edge2, wsums, lsums, lws = cell_out[:4]
         mean_loss = jnp.sum(lsums) / jnp.maximum(jnp.sum(lws), 1.0)
 
@@ -887,7 +1068,7 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
     two_tier = cfg.cloud_period >= 1
     k_buf = acfg.cohort_buffer(n)
     hist_len = acfg.history_len
-    control = _make_control_fn(cfg, pop)
+    control = _make_control_fn(cfg, pop, mesh=mesh)
     batch_fn, _ = _make_batch_fn(task, state, cfg, data_key)
     k_flat = pop.num_samples.reshape(-1)
     k_cell = jnp.sum(pop.num_samples, axis=-1)
@@ -1083,15 +1264,26 @@ def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,
 
 
 def _shard_cells(tree, mesh):
-    """Place the leading (cell) axis of every array on the mesh "data" axis."""
-    if mesh is None or "data" not in mesh.axis_names:
+    """Place the leading (cell) axis of every array on the mesh's cell
+    axis: "cells" on a two-axis fleet mesh (``launch.mesh.make_fleet_mesh``
+    — the client axis of (C, I) arrays then additionally shards over
+    "data"), falling back to "data" on the legacy single-axis mesh."""
+    if mesh is None:
         return tree
-    n = mesh.shape["data"]
+    axis = "cells" if "cells" in mesh.axis_names else "data"
+    if axis not in mesh.axis_names:
+        return tree
+    n = mesh.shape[axis]
+    n_data = mesh.shape["data"] if (axis == "cells"
+                                    and "data" in mesh.axis_names) else 0
 
     def put(a):
-        if a.ndim >= 1 and a.shape[0] % n == 0:
-            return jax.device_put(a, NamedSharding(mesh, P("data")))
-        return a
+        if a.ndim < 1 or a.shape[0] % n != 0:
+            return a
+        spec = [axis] + [None] * (a.ndim - 1)
+        if n_data > 1 and a.ndim >= 2 and a.shape[1] % n_data == 0:
+            spec[1] = "data"
+        return jax.device_put(a, NamedSharding(mesh, P(*spec)))
 
     return jax.tree.map(put, tree)
 
@@ -1244,6 +1436,10 @@ def build_simulation(cfg: FleetConfig, mesh=None,
         raise ValueError(
             f"cloud_period must be >= 0 (0 = single-tier), got "
             f"{cfg.cloud_period}")
+    if cfg.control_chunk < 0:
+        raise ValueError(
+            f"control_chunk must be >= 0 (0 = solve all cells at once), "
+            f"got {cfg.control_chunk}")
     cfg, task, state, params, pop, k_data, keys = _build_common(cfg, mesh)
     topo = cfg.topology
     two_tier = cfg.cloud_period >= 1
@@ -1276,7 +1472,7 @@ def build_simulation(cfg: FleetConfig, mesh=None,
         round_keys = keys[:cfg.rounds]
     else:
         step_fn = _make_async_step(cfg, task, state, pop, k_data, mesh=mesh)
-        control = _make_control_fn(cfg, pop)
+        control = _make_control_fn(cfg, pop, mesh=mesh)
         hist_len = cfg.async_config.history_len
 
         @jax.jit

@@ -6,6 +6,9 @@ time-triggered FL of arXiv:2408.01765):
 * partial participation — per cell, a fixed number of clients is drawn
   each round, uniformly or proportional-to-K_i (Gumbel top-k, i.e. weighted
   sampling without replacement, shape-static and jit-safe);
+  ``participation_cohort`` additionally emits the schedule as a dense
+  (C, m) index batch so the engine's cohort path can gather scheduled
+  clients before the gradient pass;
 * stragglers — i.i.d. per-round client dropout after the solver commits
   the allocation (models churn the optimizer cannot see);
 * round deadline — a hard wall-clock cutoff: clients whose realized
@@ -106,6 +109,31 @@ class AsyncConfig:
         return min(k, num_clients)
 
 
+def cohort_size(sched: ScheduleConfig, clients_per_cell: int) -> int:
+    """Static per-cell cohort width m: the dense compute batch the engine
+    gathers when the schedule is partial (full schedules degenerate to the
+    whole cell)."""
+    m = sched.participants_per_cell
+    if sched.participation == "full" or m <= 0 or m >= clients_per_cell:
+        return clients_per_cell
+    return m
+
+
+def _participation_scores(key: jax.Array, sched: ScheduleConfig,
+                          num_samples: jnp.ndarray) -> jnp.ndarray:
+    """The single per-round Gumbel top-k score tensor both the mask and the
+    cohort are derived from (one draw — PRNG consumption is identical
+    whichever entry point the engine uses)."""
+    shape = num_samples.shape
+    if sched.participation == "uniform":
+        logits = jnp.zeros(shape)
+    elif sched.participation == "weighted":
+        logits = jnp.log(num_samples.astype(jnp.float32))
+    else:
+        raise ValueError(f"unknown participation {sched.participation!r}")
+    return logits + jax.random.gumbel(key, shape)
+
+
 def participation_mask(key: jax.Array, sched: ScheduleConfig,
                        num_samples: jnp.ndarray) -> jnp.ndarray:
     """(C, I) float mask of this round's scheduled clients.
@@ -117,15 +145,36 @@ def participation_mask(key: jax.Array, sched: ScheduleConfig,
     m = sched.participants_per_cell
     if sched.participation == "full" or m <= 0 or m >= shape[-1]:
         return jnp.ones(shape, dtype=float)
-    if sched.participation == "uniform":
-        logits = jnp.zeros(shape)
-    elif sched.participation == "weighted":
-        logits = jnp.log(num_samples.astype(jnp.float32))
-    else:
-        raise ValueError(f"unknown participation {sched.participation!r}")
-    z = logits + jax.random.gumbel(key, shape)
+    z = _participation_scores(key, sched, num_samples)
     rank = jnp.argsort(jnp.argsort(-z, axis=-1), axis=-1)
     return (rank < m).astype(jnp.result_type(float))
+
+
+def participation_cohort(key: jax.Array, sched: ScheduleConfig,
+                         num_samples: jnp.ndarray
+                         ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """This round's schedule as both the (C, I) mask and the dense (C, m)
+    cohort index batch.
+
+    ``cohort[c]`` lists cell c's m scheduled client indices in ascending
+    order — the gather index of the engine's cohort compute path.  Both
+    views are ranked from the SAME single score draw as
+    ``participation_mask`` (``mask[c, cohort[c]] == 1`` exactly and every
+    downstream PRNG draw is unchanged); full participation degenerates to
+    the identity cohort with no draw at all.
+    """
+    shape = num_samples.shape
+    m = cohort_size(sched, shape[-1])
+    if m >= shape[-1]:
+        eye = jnp.arange(shape[-1], dtype=jnp.int32)
+        return (jnp.ones(shape, dtype=float),
+                jnp.broadcast_to(eye, shape))
+    z = _participation_scores(key, sched, num_samples)
+    order = jnp.argsort(-z, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    mask = (rank < m).astype(jnp.result_type(float))
+    cohort = jnp.sort(order[..., :m], axis=-1).astype(jnp.int32)
+    return mask, cohort
 
 
 def handover_mask(served_home, sched: ScheduleConfig):

@@ -55,6 +55,7 @@ import jax.numpy as jnp
 _SALT_ANGLE = 0x6E0
 _SALT_MOBILITY = 0x6E1
 _SALT_HANDOVER = 0x6E2
+_SALT_CROSS = 0x6E3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -431,7 +432,17 @@ class HexInterference(CellGeometry):
 
         graph = None
         if geo is not None:
-            graph = InterferenceGraph(cross_gain=cross, nbr_idx=geo.nbr_idx,
+            # Per-link fast fading on the interference cross paths: each
+            # (victim BS, neighbor, client) link draws its own Rayleigh
+            # power fade (exponential, mean 1 — so the fading-averaged
+            # HexState gains stay the calibration) from a salted fold of
+            # the round key; the serving-link draws above are untouched.
+            # The zero-neighbor limit (reuse >= cells) returns before this
+            # branch, keeping the orthogonal equivalence bit-exact.
+            k_cross = jax.random.fold_in(key, _SALT_CROSS)
+            ray_cross = jax.random.exponential(k_cross, cross.shape)
+            graph = InterferenceGraph(cross_gain=cross * ray_cross,
+                                      nbr_idx=geo.nbr_idx,
                                       nbr_mask=geo.nbr_mask)
         return RoundChannel(h_up=h_up, h_down=h_down, served_home=served_home,
                             interference=graph)

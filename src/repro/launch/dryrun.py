@@ -135,6 +135,112 @@ def _fl_spec(cfg, shape, mesh) -> dict:
     }
 
 
+def fleet_dryrun(verbose: bool = True) -> dict:
+    """Multi-host fleet dry-run: the cohort-sharded fleet round's two
+    compute blocks in manual SPMD (``shard_map``) on the two-axis
+    ("cells", "data") fleet mesh over the 512 host placeholder devices.
+
+    * The per-cell Algorithm-1 solve shards whole cells over "cells" —
+      each device block solves C/cells cells; the intra-cell client axis
+      stays unsharded (the vertex walk sorts it).
+    * The cohort gradient reduction shards the flat (C*m) cohort client
+      axis over "data" and psum-reduces the Eq.-(5) weighted sum — the
+      manual twin of ``engine._constrain_clients``.
+
+    Asserts both axes actually partition (shard shapes, output
+    shardings) and returns the summary dict.
+    """
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:  # jax >= 0.6 promotes it out of experimental
+        from jax import shard_map
+    from repro.core import wireless as W
+    from repro.fleet import solver as FSOLVER
+
+    mesh = MESH.make_fleet_mesh(cells=32, data=16)
+    assert mesh.axis_names == ("cells", "data"), mesh.axis_names
+    assert dict(mesh.shape) == {"cells": 32, "data": 16}, dict(mesh.shape)
+
+    cells, per_cell, m = 64, 64, 16          # 4096 clients, 1024-cohort
+    wcfg = W.WirelessConfig()
+    scfg = FSOLVER.SolverConfig()
+    rng = np.random.default_rng(0)
+    h_up = jnp.asarray(10.0 ** -rng.uniform(8, 12, (cells, per_cell)))
+    k = jnp.asarray(rng.integers(16, 64, (cells, per_cell)).astype(float))
+    cpu = jnp.asarray(rng.uniform(2e8, 8e9, (cells, per_cell)))
+    p_tx = jnp.full((cells, per_cell), wcfg.tx_power_ue_w)
+    rho_max = jnp.full((cells, per_cell), 0.9)
+    m_cell = jnp.full((cells,), 1e-4)
+    mask = jnp.ones((cells, per_cell))
+
+    def solve_block(h, kk, f, p, mp, mc, msk):
+        return FSOLVER.solve_fleet(
+            h, kk, f, p, mp, mc, msk, None, bandwidth_hz=wcfg.bandwidth_hz,
+            noise_psd=wcfg.noise_psd_w_per_hz, waterfall_m0=wcfg.waterfall_m0,
+            model_bits=wcfg.model_bits,
+            cycles_per_sample=wcfg.cycles_per_sample, weight=4e-4,
+            solver=scfg)
+
+    cell_spec = P("cells")
+    t0 = time.time()
+    solve_sharded = jax.jit(shard_map(
+        solve_block, mesh=mesh,
+        in_specs=(cell_spec,) * 7, out_specs=cell_spec,
+        check_rep=False))
+    sol = solve_sharded(h_up, k, cpu, p_tx, rho_max, m_cell, mask)
+    jax.block_until_ready(sol.prune)
+    solve_s = time.time() - t0
+
+    want = NamedSharding(mesh, cell_spec)
+    assert sol.prune.sharding.is_equivalent_to(want, sol.prune.ndim), \
+        sol.prune.sharding
+    shard_shape = sol.prune.addressable_shards[0].data.shape
+    assert shard_shape == (cells // 32, per_cell), shard_shape
+    assert bool(jnp.all(sol.feasible)), "dry-run cells must be feasible"
+
+    # -- cohort gradient reduction over "data" ------------------------------
+    n_flat, dim = cells * m, 128
+    wts = jax.device_put(jnp.asarray(rng.uniform(0, 1, (n_flat,))),
+                         NamedSharding(mesh, P("data")))
+    grads = jax.device_put(
+        jnp.asarray(rng.normal(size=(n_flat, dim)).astype(np.float32)),
+        NamedSharding(mesh, P("data")))
+
+    def grad_block(w_i, g_i):
+        return jax.lax.psum(jnp.einsum("c,c...->...", w_i, g_i), "data")
+
+    t0 = time.time()
+    grad_sharded = jax.jit(shard_map(
+        grad_block, mesh=mesh, in_specs=(P("data"), P("data")),
+        out_specs=P(), check_rep=False))
+    g_sum = grad_sharded(wts, grads)
+    jax.block_until_ready(g_sum)
+    grad_s = time.time() - t0
+
+    gshard = wts.addressable_shards[0].data.shape
+    assert gshard == (n_flat // 16,), gshard
+    ref = jnp.einsum("c,c...->...", wts, grads)
+    np.testing.assert_allclose(np.asarray(g_sum), np.asarray(ref),
+                               rtol=1e-5)
+
+    out = {"mesh": dict(mesh.shape), "devices": int(mesh.devices.size),
+           "cells": cells, "clients_per_cell": per_cell, "cohort_m": m,
+           "solve_shard_shape": list(shard_shape),
+           "grad_shard_clients": int(gshard[0]),
+           "solve_s": solve_s, "grad_s": grad_s}
+    if verbose:
+        print(f"OK   fleet shard_map dry-run on {out['devices']} devices "
+              f"mesh={out['mesh']}")
+        print(f"     solve: {cells} cells x {per_cell} clients, "
+              f"{shard_shape[0]} cells/device block ({solve_s:.1f}s)")
+        print(f"     cohort grad: {n_flat} clients over 16 data shards, "
+              f"{gshard[0]} clients/device ({grad_s:.1f}s)")
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default=None, choices=list(ARCH_NAMES),
@@ -148,9 +254,27 @@ def main(argv=None) -> int:
     ap.add_argument("--fl", action="store_true",
                     help="dry-run the distributed pruned-FL step instead "
                          "of the plain train/serve step (train shapes only)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="dry-run the cohort-sharded fleet round on the "
+                         "two-axis ('cells', 'data') mesh via shard_map "
+                         "and assert both axes partition")
     ap.add_argument("--out", default=None,
                     help="directory for per-combo JSON reports")
     args = ap.parse_args(argv)
+
+    if args.fleet:
+        try:
+            rep = fleet_dryrun()
+        except Exception as e:
+            traceback.print_exc()
+            print(f"FAIL fleet dry-run: {e}")
+            return 1
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            path = os.path.join(args.out, "fleet_dryrun_32x16.json")
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=2)
+        return 0
 
     archs = [args.arch] if args.arch else list(ARCH_NAMES)
     shapes = [args.shape] if args.shape else list(INPUT_SHAPES)

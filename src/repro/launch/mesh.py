@@ -39,6 +39,32 @@ def make_host_mesh(data: int | None = None, model: int = 1):
     return make_mesh((data, model), ("data", "model"))
 
 
+def make_fleet_mesh(cells: int | None = None, data: int | None = None):
+    """Two-axis fleet mesh: ("cells", "data").
+
+    The fleet engine places the leading cell axis of population/control
+    tensors (and the solver's per-cell batch) on "cells" and the flat
+    client axis of the gradient batch on "data" — see
+    ``repro.fleet.engine``'s sharding notes.  With neither size given the
+    available devices split as near-square as possible (cells gets the
+    smaller factor: per-cell client counts usually exceed the cell count's
+    parallel grain).
+    """
+    n = jax.device_count()
+    if cells is None and data is None:
+        cells = 1
+        for f in range(int(n ** 0.5), 0, -1):
+            if n % f == 0:
+                cells = f
+                break
+        data = n // cells
+    elif cells is None:
+        cells = n // data
+    elif data is None:
+        data = n // cells
+    return make_mesh((cells, data), ("cells", "data"))
+
+
 def required_devices(multi_pod: bool) -> int:
     shape = MULTI_POD if multi_pod else SINGLE_POD
     n = 1

@@ -427,3 +427,88 @@ def test_grow_iters_shim_warns_and_loads():
     assert "grow_iters" not in [f.name for f in
                                 __import__("dataclasses").fields(
                                     SolverConfig)]
+
+
+# ---------------------------------------------------------------------------
+# Per-link fast fading on the interference cross paths (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+def _cross_graphs(seed, topo, pop, geo):
+    key = jax.random.PRNGKey(seed)
+    graph = geo.round_channel(key, pop, topo).interference
+    ray = jax.random.exponential(
+        jax.random.fold_in(key, FT._SALT_CROSS), graph.cross_gain.shape)
+    return graph, ray
+
+
+def test_cross_fades_are_per_link_fast_and_seed_salted():
+    """The realized cross gain is static geometry x an i.i.d. per-link
+    Exp(1) fade drawn from the _SALT_CROSS fold of the round key: it
+    changes every round, varies across the neighbor axis within a client
+    (per-link, not a per-cell scalar), and the static factor it divides
+    back out to is round-invariant."""
+    geo = HexInterference(reuse=1, mobility_m=0.0)
+    topo = FleetTopology(num_cells=4, clients_per_cell=6)
+    pop = geo.make_population(jax.random.PRNGKey(0), topo, 0.2)
+
+    g1, ray1 = _cross_graphs(1, topo, pop, geo)
+    g2, ray2 = _cross_graphs(2, topo, pop, geo)
+    m = np.asarray(g1.nbr_mask, bool)         # (C, K) valid-neighbor mask
+    assert m.sum() >= 8                        # reuse=1: dense coupling
+
+    # fast fading: realized cross gains move between rounds
+    a1, a2 = np.asarray(g1.cross_gain), np.asarray(g2.cross_gain)
+    assert not np.allclose(a1[m], a2[m], rtol=1e-3, atol=0.0)
+    # seeded: the same round key reproduces the draw bitwise
+    g1b, _ = _cross_graphs(1, topo, pop, geo)
+    np.testing.assert_array_equal(a1, np.asarray(g1b.cross_gain))
+
+    # per-link: the round-to-round fade ratio differs across the neighbor
+    # axis for the same client (a per-cell or per-client scalar fade
+    # would scale all of a client's links together)
+    ratio = a1 / a2                            # (C, K, I)
+    c = np.flatnonzero(m.sum(-1) >= 2)[0]      # a cell with >= 2 neighbors
+    k0, k1 = np.flatnonzero(m[c])[:2]
+    assert not np.allclose(ratio[c, k0], ratio[c, k1], rtol=1e-3, atol=0.0)
+
+    # static factor: dividing the salted Exp(1) fade back out recovers the
+    # same geometry gains from independent rounds (mobility off)
+    s1 = a1[m] / np.asarray(ray1)[m]
+    s2 = a2[m] / np.asarray(ray2)[m]
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)  # f32 mul/div round-trip
+
+
+def test_cross_fades_unit_mean():
+    """Mean fade 1: the fading-averaged calibration of the static gains
+    survives the per-link draw (sample mean over rounds x links ~ 1)."""
+    geo = HexInterference(reuse=1, mobility_m=0.0)
+    topo = FleetTopology(num_cells=4, clients_per_cell=6)
+    pop = geo.make_population(jax.random.PRNGKey(0), topo, 0.2)
+    fades = []
+    for s in range(40):
+        graph, ray = _cross_graphs(s, topo, pop, geo)
+        m = np.asarray(graph.nbr_mask, bool)
+        fades.append(np.asarray(ray)[m].ravel())
+    fades = np.concatenate(fades)
+    assert fades.min() >= 0.0
+    assert abs(fades.mean() - 1.0) < 0.06      # Exp(1): se ~ 1/sqrt(2880)
+    assert abs(fades.std() - 1.0) < 0.10
+
+
+def test_cross_fades_leave_serving_links_untouched():
+    """The salted cross draw must not consume serving-link randomness:
+    h_up / h_down / served_home match the pre-fade channel bit-for-bit
+    (they are shared draws; only graph.cross_gain carries the new fade)."""
+    topo = FleetTopology(num_cells=4, clients_per_cell=6)
+    hi = HexInterference(reuse=1, mobility_m=0.0)
+    pop = hi.make_population(jax.random.PRNGKey(0), topo, 0.2)
+    ch = hi.round_channel(jax.random.PRNGKey(5), pop, topo)
+    ch_again = hi.round_channel(jax.random.PRNGKey(5), pop, topo)
+    np.testing.assert_array_equal(np.asarray(ch.h_up),
+                                  np.asarray(ch_again.h_up))
+    # zero-co-channel limit: no graph, hence no cross draw at all — the
+    # orthogonal bit-exact equivalence (pinned above) is unaffected
+    far = HexInterference(reuse=topo.num_cells)
+    pop_far = far.make_population(jax.random.PRNGKey(0), topo, 0.2)
+    assert far.round_channel(jax.random.PRNGKey(5), pop_far,
+                             topo).interference is None
