@@ -1,11 +1,13 @@
-"""Perf-regression guardrail: diff a fresh ``BENCH_fleet.json`` against
-the committed baseline.
+"""Perf-regression guardrail: diff a fresh ``BENCH_fleet.json`` (or
+``BENCH_serve.json``) against the committed baseline.
 
 Compares every benchmark arm the two documents share — matched on
-``(mode, kernel, clients, buffer)`` — on throughput (``rounds_per_s``,
-which may only drop by ``--rtol``), trajectory quality (``final_loss``,
-which may only worsen by ``--loss-rtol`` relative), and the
-fused-over-reference ``speedups`` per (mode, clients) (``--speedup-rtol``).
+``ARM_KEYS`` — on throughput (``rounds_per_s`` for fleet arms,
+``tokens_per_s`` for serve arms; either may only drop by ``--rtol``),
+trajectory quality (``final_loss``, which may only worsen by
+``--loss-rtol`` relative), the fused-over-reference ``speedups`` per
+(mode, clients), and the sparse-over-dense ``serve_speedups`` per
+(batch, rho, impl) (both ``--speedup-rtol``).
 Improvements never fail.  Arms present in only one document are reported
 but don't fail the check (the sweep shape is allowed to grow).
 
@@ -38,9 +40,12 @@ BASELINE = os.path.join(os.path.dirname(__file__), "results",
 
 # keys that identify "the same arm" across two bench documents
 # ("cohort" distinguishes the cohort-gather arms of fleet_bench --cohort
-# from the full-participation sweep at the same client count; records
-# that predate the key carry None on both sides and keep matching)
-ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort")
+# from the full-participation sweep at the same client count; "batch" /
+# "rho" / "impl" identify serve_bench decode arms, which carry
+# mode="serve" and None for the fleet-only keys; records that predate a
+# key carry None on both sides and keep matching)
+ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort",
+            "batch", "rho", "impl")
 
 
 def arm_id(record: dict) -> tuple:
@@ -48,6 +53,10 @@ def arm_id(record: dict) -> tuple:
 
 
 def arm_label(record: dict) -> str:
+    if record.get("impl") is not None:       # serve_bench decode arm
+        return (f"{record.get('mode', 'serve')}/{record['impl']}"
+                f"@batch={record.get('batch', '?')}"
+                f",rho={record.get('rho', '?')}")
     parts = [f"{record.get('mode', '?')}/{record.get('kernel', '?')}"
              f"@{record.get('clients', '?')}"]
     if record.get("buffer"):
@@ -118,6 +127,17 @@ def compare(base: dict, fresh: dict, rtol: float = 0.30,
                 notes.append(f"{label}: rounds/s {rb:.2f} -> {rf:.2f} "
                              f"({100 * drop:.0f}% drop, within budget)")
 
+        tb, tf = b.get("tokens_per_s"), f.get("tokens_per_s")
+        if tb and tf:
+            drop = 1.0 - tf / tb
+            if drop > rtol:
+                failures.append(
+                    f"{label}: tokens/s {tb:.0f} -> {tf:.0f} "
+                    f"({100 * drop:.0f}% drop > {100 * rtol:.0f}% budget)")
+            elif drop > rtol / 2:
+                notes.append(f"{label}: tokens/s {tb:.0f} -> {tf:.0f} "
+                             f"({100 * drop:.0f}% drop, within budget)")
+
         lb, lf = b.get("final_loss"), f.get("final_loss")
         if lb is not None and lf is not None and abs(lb) > 0:
             worse = (lf - lb) / abs(lb)
@@ -136,6 +156,19 @@ def compare(base: dict, fresh: dict, rtol: float = 0.30,
         if drop > speedup_rtol:
             failures.append(
                 f"speedup {key[0]}@{key[1]}: {sb:.2f}x -> {sf:.2f}x "
+                f"({100 * drop:.0f}% drop > {100 * speedup_rtol:.0f}%)")
+
+    base_ssp = {(s["batch"], s["rho"], s["impl"]): s["speedup"]
+                for s in base.get("serve_speedups", [])}
+    fresh_ssp = {(s["batch"], s["rho"], s["impl"]): s["speedup"]
+                 for s in fresh.get("serve_speedups", [])}
+    for key in sorted(set(base_ssp) & set(fresh_ssp), key=str):
+        sb, sf = base_ssp[key], fresh_ssp[key]
+        drop = 1.0 - sf / sb
+        if drop > speedup_rtol:
+            failures.append(
+                f"serve speedup {key[2]}@batch={key[0]},rho={key[1]}: "
+                f"{sb:.2f}x -> {sf:.2f}x "
                 f"({100 * drop:.0f}% drop > {100 * speedup_rtol:.0f}%)")
 
     oh = fresh.get("telemetry_overhead")

@@ -374,7 +374,9 @@ def env_metadata() -> dict:
 
 
 # mirror of check_regression.ARM_KEYS: what identifies "the same arm"
-_ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort")
+# (batch/rho/impl are serve_bench keys — always None on fleet records)
+_ARM_KEYS = ("mode", "kernel", "clients", "buffer", "cohort",
+             "batch", "rho", "impl")
 
 
 def write_json(records: list[dict], path: str | None = None,

@@ -1,87 +1,61 @@
 """The paper's technique on a transformer: federated pruned training of a
-(reduced) assigned architecture with the distributed shard_map trainer.
+(reduced) assigned architecture through the fleet engine's task protocol.
 
-Every round couples the full stack exactly as a production deployment
-would: channel draw -> Algorithm 1 -> per-client TPU block pruning masks ->
-masked local grads -> packet-error-weighted psum aggregation -> SGD.
+``TransformerTask`` plugs the causal-LM model into ``run_fleet``, so
+every round couples the full stack exactly as a production deployment
+would: channel draw -> Algorithm 1 (per-cell closed-form solve, inside
+the scan) -> per-client TPU block pruning masks -> masked local grads ->
+packet-error-weighted aggregation -> SGD.  Compare
+``examples/serve_pruned.py``, which continues this path into
+block-sparse serving.
 
   PYTHONPATH=src python examples/pruned_llm_federated.py --arch smollm-135m
-  PYTHONPATH=src python examples/pruned_llm_federated.py --arch olmoe-1b-7b --rounds 20
+  PYTHONPATH=src python examples/pruned_llm_federated.py \
+      --arch olmoe-1b-7b --rounds 20 --dirichlet 0.3
 """
 
 import argparse
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_NAMES, get_config
-from repro.core import aggregation, tradeoff, wireless
-from repro.core.convergence import ConvergenceBound, SmoothnessParams
-from repro.data import tokens
-from repro.federated import trainer as FT
-from repro.launch import mesh as MESH
-from repro.models import model as M
+from repro.fleet import FleetConfig, FleetTopology, run_fleet
+from repro.fleet.task import TransformerTask
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="smollm-135m", choices=list(ARCH_NAMES))
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="assigned architecture (reduced smoke variant)")
     ap.add_argument("--rounds", type=int, default=30)
-    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--cells", type=int, default=2)
+    ap.add_argument("--clients-per-cell", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=16)
     ap.add_argument("--batch-per-client", type=int, default=2)
-    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--dirichlet", type=float, default=None,
+                    help="non-IID token-pool skew alpha (None = IID)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).smoke_variant()
-    mesh = MESH.make_host_mesh(model=1)
-    caxes = ("data",)
-    n = FT.num_clients(mesh, caxes)       # 1 per CPU device here; many on TPU
-    print(f"arch={args.arch} (reduced), clients={n}, mesh={dict(mesh.shape)}")
+    task = TransformerTask(arch_name=args.arch, seq_len=args.seq,
+                           local_batch=args.batch_per_client,
+                           dirichlet_alpha=args.dirichlet)
+    n = args.cells * args.clients_per_cell
+    cfg = FleetConfig(
+        topology=FleetTopology(num_cells=args.cells,
+                               clients_per_cell=args.clients_per_cell),
+        rounds=args.rounds, seed=args.seed, task=task)
+    print(f"arch={args.arch} (reduced), clients={n} "
+          f"({args.cells} cells x {args.clients_per_cell})")
 
-    params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    step = FT.make_fl_train_step(cfg, mesh, client_axes=caxes, block=16,
-                                 lr=args.lr)
-
-    # wireless + trade-off substrate (5 simulated UEs mapped round-robin
-    # onto the n device clients)
-    num_ue = max(n, 5)
-    samples = np.resize([30, 40, 50], num_ue).astype(np.float64)
-    wcfg = wireless.WirelessConfig(model_bits=8 * 4 *
-                                   sum(int(np.prod(l.shape)) for l in
-                                       jax.tree.leaves(params)))
-    channel = wireless.Channel(num_ue, seed=args.seed)
-    bound = ConvergenceBound(SmoothnessParams(), samples)
-
-    stream = tokens.TokenStream(cfg.vocab_size, seed=args.seed)
-    key = jax.random.PRNGKey(args.seed + 1)
-
-    for rnd in range(args.rounds):
-        h_up, h_down = channel.sample_gains()
-        prob = tradeoff.TradeoffProblem(
-            cfg=wcfg, bound=bound, h_up=h_up, h_down=h_down,
-            tx_power=np.full(num_ue, wcfg.tx_power_ue_w),
-            cpu_hz=np.full(num_ue, 5e9), num_samples=samples,
-            max_prune=np.full(num_ue, 0.7))
-        sol = tradeoff.solve_alternating(prob)
-
-        key, k_arr = jax.random.split(key)
-        rho = jnp.asarray(sol.prune[:n], jnp.float32)
-        per = jnp.asarray(sol.per[:n], jnp.float32)
-        arrivals = aggregation.sample_arrivals(k_arr, per)
-        k_i = jnp.asarray(samples[:n], jnp.float32)
-
-        batch = {"tokens": jnp.asarray(stream.sample(
-            n * args.batch_per_client, args.seq))}
-        params, metrics = step(params, batch, rho, arrivals, k_i)
-        if rnd % 5 == 0 or rnd == args.rounds - 1:
-            print(f"round {rnd:3d} loss={float(metrics['loss']):.4f} "
-                  f"rho={float(jnp.mean(rho)):.3f} "
-                  f"arrived={int(jnp.sum(arrivals))}/{n} "
-                  f"deadline={sol.deadline*1e3:.0f}ms")
-
-    print("done; final loss", float(metrics["loss"]))
+    res = run_fleet(cfg)
+    for rnd in range(0, args.rounds, max(1, args.rounds // 6)):
+        print(f"round {rnd:3d} loss={res.losses[rnd]:.4f} "
+              f"rho={res.mean_prune[rnd]:.3f} "
+              f"arrived={int(res.participants[rnd])}/{n} "
+              f"deadline={np.mean(res.deadlines[rnd]) * 1e3:.0f}ms")
+    print(f"done; final loss {res.losses[-1]:.4f}, "
+          f"simulated wall-clock {res.wall_clock[-1]:.1f}s")
+    assert np.all(np.isfinite(res.losses))
 
 
 if __name__ == "__main__":

@@ -30,6 +30,16 @@ def save(path: str, tree: PyTree) -> None:
     np.savez_compressed(path, **_flatten(tree))
 
 
+def restore_flat(path: str) -> dict[str, np.ndarray]:
+    """Raw path-keyed view of a checkpoint: ``{"a/b/c": array, ...}``.
+
+    For readers that need keys the writer's ``like`` tree can't predict
+    (e.g. the serve loader's per-leaf tile keeps, whose count and shapes
+    live *in* the file).  Keys join the pytree path with "/"."""
+    with np.load(path) as data:
+        return {k.replace(_SEP, "/"): v for k, v in dict(data).items()}
+
+
 def restore(path: str, like: PyTree) -> PyTree:
     """Restore into the structure of ``like`` (shapes/dtypes preserved)."""
     with np.load(path) as data:

@@ -42,6 +42,7 @@ from repro.core.wireless import (
 
 __all__ = [
     "SolverConvergenceWarning",
+    "ServingCostModel",
     "TradeoffProblem",
     "TradeoffSolution",
     "solve_pruning",
@@ -126,6 +127,42 @@ class TradeoffProblem:
         return (1.0 - self.weight) * t + self.weight * gamma
 
 
+@dataclasses.dataclass(frozen=True)
+class ServingCostModel:
+    """Prices deployment-time decode into the round objective (beyond the
+    paper's (14a), which only sees training uplink/compute).
+
+    Block-sparse serving makes per-token latency affine in the mean
+    pruning rate: the serve engine skips pruned tiles, so
+
+        t_token(rho) = base_latency_s * (alpha + (1 - alpha)(1 - rho))
+
+    where ``alpha`` (``overhead_frac``) is the non-prunable fraction of a
+    decode step — attention, norms, embeddings, dispatch.  Both constants
+    are *measured*: ``benchmarks/serve_bench.py --tradeoff`` fits alpha
+    from dense vs rho = 0.75 decode timings and feeds the model back in.
+    The term rewards pruning (serving cost falls as rho rises), so the
+    optimum shifts toward higher rho than the uplink-only solve — the
+    serving-aware end of the communication-learning trade-off.
+    """
+
+    base_latency_s: float            # dense (rho = 0) per-token latency
+    overhead_frac: float = 0.2       # alpha: non-prunable step fraction
+    tokens_per_round: float = 1000.0  # serving tokens amortized per round
+    weight: float = 1.0              # relative weight vs (14a)
+
+    def per_token_latency(self, rho_mean: float) -> float:
+        a = float(self.overhead_frac)
+        return float(self.base_latency_s) * (
+            a + (1.0 - a) * (1.0 - float(rho_mean)))
+
+    def cost(self, prune: np.ndarray) -> float:
+        """Serving-cost term for one round at pruning rates ``prune``."""
+        rho_mean = float(np.mean(np.asarray(prune, dtype=np.float64)))
+        return float(self.weight) * float(self.tokens_per_round) \
+            * self.per_token_latency(rho_mean)
+
+
 @dataclasses.dataclass
 class TradeoffSolution:
     prune: np.ndarray
@@ -174,6 +211,41 @@ def solve_pruning(prob: TradeoffProblem, bandwidth: np.ndarray,
         t_np, prob.num_samples, prob.weight,
         prob.bound.m if m is None else m, prob.max_prune, xp=np, mask=mask)
     return float(t_star), rho
+
+
+def _solve_pruning_serving(prob: TradeoffProblem, bandwidth: np.ndarray,
+                           serving: ServingCostModel
+                           ) -> tuple[float, np.ndarray]:
+    """Pruning sub-problem with the serving-cost term.
+
+    g(t~) = (1-lambda) t~ + lambda m sum K_i^2 rho_i(t~)
+            + serving.cost(rho(t~))
+    with rho_i(t~) = clip(1 - t~/t_i^np, 0, rho_i^max) stays piecewise
+    linear in t~, but the rho^max clip makes it non-convex (each client's
+    rho is constant-then-linear-then-constant), so Proposition 1's
+    first-nonneg-slope walk no longer applies.  A piecewise-linear g
+    still attains its minimum at a breakpoint: evaluate g exactly at
+    every vertex — the no-pruning latencies t_i^np, the saturation points
+    (1 - rho_i^max) t_i^np, and the feasibility floor t~min — and take
+    the argmin.  O(I^2), exact.
+    """
+    t_np = prob.no_prune_latency(bandwidth)
+    finite = np.isfinite(t_np)
+    rho_max = np.asarray(prob.max_prune, dtype=np.float64)
+    sat = (1.0 - rho_max) * t_np
+    t_lo = float(np.max(sat[finite])) if np.any(finite) else 0.0
+    cands = np.concatenate([t_np[finite], sat[finite], [t_lo]])
+    cands = np.unique(np.clip(cands, t_lo, None))
+    with np.errstate(divide="ignore", invalid="ignore"):
+        need = 1.0 - cands[:, None] / t_np[None, :]
+    need = np.where(finite[None, :], need, 1.0)
+    rho = np.clip(need, 0.0, rho_max[None, :])          # (T, I)
+    k = np.asarray(prob.num_samples, dtype=np.float64)
+    lam = prob.weight
+    g = (1.0 - lam) * cands + lam * prob.bound.m * (rho @ (k * k)) \
+        + np.array([serving.cost(r) for r in rho])
+    i = int(np.argmin(g))
+    return float(cands[i]), rho[i]
 
 
 # ---------------------------------------------------------------------------
@@ -234,7 +306,9 @@ def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
                       rtol: float = 1e-8,
                       mask: np.ndarray | None = None,
                       deadline_cap: float | None = None,
-                      m: float | None = None) -> TradeoffSolution:
+                      m: float | None = None,
+                      serving: ServingCostModel | None = None
+                      ) -> TradeoffSolution:
     """Algorithm 1: equal-split init, then alternate Prop.1 / Eq.(21).
 
     The plain call (``mask``/``deadline_cap``/``m`` all None) is the
@@ -254,25 +328,49 @@ def solve_alternating(prob: TradeoffProblem, max_iters: int = 50,
       that fits the budget keeps its allocation.
     * ``m`` — Eq.-(11) coefficient of the *scheduled subset* (the fleet
       engine re-derives it per round under partial participation).
+    * ``serving`` — optional ``ServingCostModel``: adds the measured
+      per-token decode cost to the objective, swapping the Prop.-1 vertex
+      walk for the exact piecewise-linear argmin
+      (``_solve_pruning_serving``).  The bandwidth step and convergence
+      loop are unchanged; ``serving=None`` leaves the plain path
+      untouched.  Not combinable with the scheduling extensions.
     """
+    if serving is not None and (mask is not None or deadline_cap is not None
+                                or m is not None):
+        raise NotImplementedError(
+            "serving-cost term is only supported on the plain "
+            "(full-participation) solve")
     if mask is None and deadline_cap is None and m is None:
+        if serving is None:
+            prune_step = solve_pruning
+        else:
+            def prune_step(p, bw):
+                return _solve_pruning_serving(p, bw, serving)
         bandwidth = np.full(prob.num_clients,
                             prob.cfg.bandwidth_hz / prob.num_clients)
         prev_cost = np.inf
-        deadline, prune = solve_pruning(prob, bandwidth)
+        deadline, prune = prune_step(prob, bandwidth)
         resid = np.inf
         for it in range(1, max_iters + 1):
-            deadline, prune = solve_pruning(prob, bandwidth)
+            deadline, prune = prune_step(prob, bandwidth)
             bandwidth = solve_bandwidth(prob, prune, deadline)
             cost = prob.inner_cost(deadline, bandwidth, prune)
+            if serving is not None:
+                cost = cost + serving.cost(prune)
             resid = abs(prev_cost - cost) / max(abs(cost), 1.0)
             if resid <= rtol:
-                return _finish(prob, bandwidth, prune, deadline, it,
-                               residual=resid)
+                sol = _finish(prob, bandwidth, prune, deadline, it,
+                              residual=resid)
+                if serving is not None:
+                    sol.inner_cost = cost
+                return sol
             prev_cost = cost
         _warn_not_converged("Algorithm 1 alternation", max_iters, resid, rtol)
-        return _finish(prob, bandwidth, prune, deadline, max_iters,
-                       residual=resid)
+        sol = _finish(prob, bandwidth, prune, deadline, max_iters,
+                      residual=resid)
+        if serving is not None:
+            sol.inner_cost = cost
+        return sol
 
     msk = np.ones(prob.num_clients) if mask is None \
         else np.asarray(mask, dtype=np.float64)

@@ -73,7 +73,8 @@ mask) and the engine gathers weights, pruning rates and client batches
 along it before the gradient pass, so the hot path — and the
 interference-free Algorithm-1 solve, which runs over the gathered
 cohort and scatters back — scales with m, not I.
-``FleetConfig.control_chunk`` additionally blocks the solve over cells,
+``FleetConfig.control_chunk`` additionally blocks the solve over cells —
+and, in async mode, the per-event rebuild of the (C, I) in-flight state —
 bounding the control pass's working set at million-client fleets.
 """
 
@@ -169,7 +170,9 @@ class FleetConfig:
     # idempotent, so chunked solves are bit-identical to the global vmap.
     # Ignored when an interference graph couples the cells (the damped
     # SINR fixed point is global by construction) or when a custom
-    # solve_fn is plugged in.
+    # solve_fn is plugged in.  In async mode the same knob also blocks
+    # the per-event rebuild of the (C, I) in-flight carry (_start_state),
+    # again bit-identically — the rebuild is elementwise over cells.
     control_chunk: int = 0
     # client-gradient hot path: "reference" is the vmap + AD batch;
     # "fused" runs the task's fused kernel hook (the MLP task streams
@@ -1010,26 +1013,55 @@ class AsyncState(NamedTuple):
     prune_sum: jnp.ndarray    # (C, I) Theorem-1 rho accumulator
 
 
-def _start_state(ctl: RoundControl, now, version, prev: Optional[AsyncState],
-                 coh: Optional[jnp.ndarray], cfg: FleetConfig) -> AsyncState:
-    """(Re)launch clients: cohort members (or everyone, at init) adopt the
-    fresh control draw and an arrival time at their own latency."""
-    b_hz = cfg.wireless.bandwidth_hz
-    ready = SCHED.arrival_times(now, ctl.t_client,
-                                cfg.async_config.retry_backoff_s)
-    alive = ctl.strag * jnp.isfinite(ctl.t_client).astype(
-        jnp.result_type(float))
-    new = AsyncState(
+def _map_cell_blocks(fn, chunk: int, operands):
+    """Apply ``fn`` (pytree of leading-(C, ...) arrays -> pytree) over
+    consecutive cell blocks, mirroring ``_solve_cells_chunked``: full
+    ``chunk``-sized blocks run under one ``lax.map``, a ragged remainder
+    runs as one exact-sized call, and the results concatenate on the cell
+    axis.  ``fn`` must be elementwise over cells (no cross-cell
+    reductions), which makes the blocked result bit-identical to
+    ``fn(operands)`` — only the peak working set changes.
+    """
+    c = jax.tree_util.tree_leaves(operands)[0].shape[0]
+    chunk = min(chunk, c)
+    n_full = c // chunk
+    rem = c - n_full * chunk
+    parts = []
+    if n_full:
+        stacked = jax.tree.map(
+            lambda a: a[:n_full * chunk].reshape(
+                (n_full, chunk) + a.shape[1:]), operands)
+        mapped = jax.lax.map(fn, stacked)
+        parts.append(jax.tree.map(
+            lambda a: a.reshape((n_full * chunk,) + a.shape[2:]), mapped))
+    if rem:
+        parts.append(fn(jax.tree.map(lambda a: a[n_full * chunk:], operands)))
+    if len(parts) == 1:
+        return parts[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+
+
+def _fresh_state(t_client, mask, strag, arrivals, prune, per, bandwidth,
+                 deadline, m_round, *, now, version, retry,
+                 b_hz) -> AsyncState:
+    """A just-launched AsyncState for one control draw (any cell slice)."""
+    ready = SCHED.arrival_times(now, t_client, retry)
+    alive = strag * jnp.isfinite(t_client).astype(jnp.result_type(float))
+    return AsyncState(
         ready=ready,
-        start_ver=jnp.full(ctl.mask.shape, version, jnp.int32),
-        rho=ctl.sol.prune, per=ctl.sol.per, sched=ctl.mask, alive=alive,
-        arrive=ctl.arrivals, m_cell=ctl.m_round,
-        deadline_c=ctl.sol.deadline,
-        bwutil_c=jnp.sum(ctl.sol.bandwidth, axis=-1) / b_hz,
-        per_sum=jnp.zeros_like(ctl.mask),
-        prune_sum=jnp.zeros_like(ctl.mask))
-    if prev is None:
-        return new
+        start_ver=jnp.full(mask.shape, version, jnp.int32),
+        rho=prune, per=per, sched=mask, alive=alive,
+        arrive=arrivals, m_cell=m_round,
+        deadline_c=deadline,
+        bwutil_c=jnp.sum(bandwidth, axis=-1) / b_hz,
+        per_sum=jnp.zeros_like(mask),
+        prune_sum=jnp.zeros_like(mask))
+
+
+def _merge_state(new: AsyncState, prev: AsyncState,
+                 coh: jnp.ndarray) -> AsyncState:
+    """Cohort members adopt the fresh launch; everyone else stays in
+    flight.  Elementwise over cells (chunk-safe)."""
     pick = lambda n, p: jnp.where(coh > 0, n, p)
     return AsyncState(
         ready=pick(new.ready, prev.ready),
@@ -1040,6 +1072,40 @@ def _start_state(ctl: RoundControl, now, version, prev: Optional[AsyncState],
         # per-cell telemetry refreshes with every solve (all cells resolve)
         m_cell=new.m_cell, deadline_c=new.deadline_c, bwutil_c=new.bwutil_c,
         per_sum=prev.per_sum, prune_sum=prev.prune_sum)
+
+
+def _start_state(ctl: RoundControl, now, version, prev: Optional[AsyncState],
+                 coh: Optional[jnp.ndarray], cfg: FleetConfig) -> AsyncState:
+    """(Re)launch clients: cohort members (or everyone, at init) adopt the
+    fresh control draw and an arrival time at their own latency.
+
+    ``cfg.control_chunk`` blocks the per-event rebuild over cells (the
+    same knob that blocks the solver): the twelve (C, I)/(C,) in-flight
+    carries are rebuilt ``chunk`` cells at a time under ``lax.map``, so a
+    million-client async event's transient state fits the cohort memory
+    budget.  Every operation is elementwise over cells, so the blocked
+    rebuild is bit-identical to the global one (pinned by
+    tests/test_fleet_async.py).
+    """
+    cell_args = (ctl.t_client, ctl.mask, ctl.strag, ctl.arrivals,
+                 ctl.sol.prune, ctl.sol.per, ctl.sol.bandwidth,
+                 ctl.sol.deadline, ctl.m_round)
+    retry = cfg.async_config.retry_backoff_s
+    b_hz = cfg.wireless.bandwidth_hz
+
+    def build(ops):
+        new = _fresh_state(*ops[0], now=now, version=version, retry=retry,
+                           b_hz=b_hz)
+        if len(ops) == 1:
+            return new
+        return _merge_state(new, ops[1], ops[2])
+
+    if prev is None:
+        return build((cell_args,))
+    c = ctl.mask.shape[0]
+    if not (0 < cfg.control_chunk < c):
+        return build((cell_args, prev, coh))
+    return _map_cell_blocks(build, cfg.control_chunk, (cell_args, prev, coh))
 
 
 def _make_async_step(cfg: FleetConfig, task: TASK.FleetTask, state: PyTree,

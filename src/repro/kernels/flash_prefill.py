@@ -14,6 +14,12 @@ G = H/Hkv query heads of one KV head share each fetched K/V block.
 
 Causality prunes whole (q, k) block pairs via @pl.when before any MXU
 work; sliding windows prune from the other side.
+
+Mask-aware serving (PR 9): ``head_mask`` marks the live KV heads of a
+block-pruned model (see decode_attention.py for why skipping a dead head
+is lossless).  It rides scalar prefetch and joins the @pl.when block-skip
+predicate; ``flash_prefill_xla`` is the tile-loop twin whose causal /
+head skips are resolved at trace time (the CPU serving path).
 """
 
 from __future__ import annotations
@@ -22,15 +28,17 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 _NEG = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _kernel(hm_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             block_q: int, block_s: int, n_k: int, causal: bool,
             window, t_valid: int, scale: float):
+    h = pl.program_id(1)
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -42,10 +50,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     q_lo = qi * block_q
     k_lo = ki * block_s
-    # block-level pruning: causal -> skip blocks fully above the diagonal;
-    # window -> skip blocks fully left of the window; ragged T -> skip
-    # blocks past the valid key length
-    live = k_lo < t_valid
+    # block-level pruning: pruned KV head -> the whole sweep is dead;
+    # causal -> skip blocks fully above the diagonal; window -> skip
+    # blocks fully left of the window; ragged T -> skip blocks past the
+    # valid key length
+    live = jnp.logical_and(hm_ref[h] > 0, k_lo < t_valid)
     if causal:
         live = jnp.logical_and(live, k_lo <= q_lo + block_q - 1)
     if window is not None:
@@ -94,10 +103,12 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   block_q: int = 256, block_s: int = 512,
                   causal: bool = True, window: int | None = None,
                   t_valid: int | None = None,
+                  head_mask: jnp.ndarray | None = None,
                   interpret: bool = True) -> jnp.ndarray:
     """q: (B, S, H, hd); k, v: (B, T, Hkv, hd).  Returns (B, S, H, hd)
     float32.  S % block_q == 0 and T % block_s == 0 (ops.py pads);
-    ``t_valid`` masks padded keys (defaults to T)."""
+    ``t_valid`` masks padded keys (defaults to T).  ``head_mask``:
+    optional (Hkv,) live-head indicators; dead heads output zeros."""
     b, s, h, hd = q.shape
     t, hkv = k.shape[1], k.shape[2]
     g = h // hkv
@@ -105,27 +116,114 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     t_valid = t if t_valid is None else t_valid
     scale = hd ** -0.5
     qg = q.reshape(b, s, hkv, g, hd)
+    hm = jnp.ones((hkv,), jnp.int32) if head_mask is None \
+        else (jnp.asarray(head_mask) > 0).astype(jnp.int32)
     out = pl.pallas_call(
         functools.partial(_kernel, block_q=block_q, block_s=block_s,
                           n_k=n_k, causal=causal, window=window,
                           t_valid=t_valid, scale=scale),
-        grid=(b, hkv, n_q, n_k),
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, g, hd),
-                         lambda b_, h_, q_, k_: (b_, q_, h_, 0, 0)),
-            pl.BlockSpec((1, block_s, 1, hd),
-                         lambda b_, h_, q_, k_: (b_, k_, h_, 0)),
-            pl.BlockSpec((1, block_s, 1, hd),
-                         lambda b_, h_, q_, k_: (b_, k_, h_, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, block_q, 1, g, hd),
-                               lambda b_, h_, q_, k_: (b_, q_, h_, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((block_q * g, 1), jnp.float32),
-            pltpu.VMEM((block_q * g, 1), jnp.float32),
-            pltpu.VMEM((block_q * g, hd), jnp.float32),
-        ],
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, n_q, n_k),
+            in_specs=[
+                pl.BlockSpec((1, block_q, 1, g, hd),
+                             lambda b_, h_, q_, k_, *_: (b_, q_, h_, 0, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b_, h_, q_, k_, *_: (b_, k_, h_, 0)),
+                pl.BlockSpec((1, block_s, 1, hd),
+                             lambda b_, h_, q_, k_, *_: (b_, k_, h_, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, block_q, 1, g, hd),
+                                   lambda b_, h_, q_, k_, *_: (b_, q_, h_, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((block_q * g, 1), jnp.float32),
+                pltpu.VMEM((block_q * g, 1), jnp.float32),
+                pltpu.VMEM((block_q * g, hd), jnp.float32),
+            ],
+        ),
         out_shape=jax.ShapeDtypeStruct((b, s, hkv, g, hd), jnp.float32),
         interpret=interpret,
-    )(qg, k, v)
+    )(hm, qg, k, v)
+    return out.reshape(b, s, h, hd)
+
+
+def flash_prefill_xla(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      block_q: int = 256, block_s: int = 512,
+                      causal: bool = True, window: int | None = None,
+                      t_valid: int | None = None,
+                      head_mask=None) -> jnp.ndarray:
+    """XLA tile-loop twin of ``flash_prefill``: the (q block, k block)
+    sweep is a python loop whose causal / window / ragged-T / head skips
+    are *static* — dead block pairs and statically dead KV heads never
+    enter the trace, so prefill compute scales with the live fraction.
+    A traced ``head_mask`` degrades to a per-head ``lax.cond``.  Ragged S
+    and T are sliced short (no padding needed)."""
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = hd ** -0.5
+    block_q = min(block_q, s)
+    block_s = min(block_s, t)
+    n_q, n_k = -(-s // block_q), -(-t // block_s)
+    t_valid = t if t_valid is None else t_valid
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    static_hm = head_mask is None or isinstance(head_mask, np.ndarray)
+    heads = []
+    for hi in range(hkv):
+        if static_hm and head_mask is not None \
+                and not bool(head_mask[hi] > 0):
+            heads.append(jnp.zeros((b, s, g, hd), jnp.float32))
+            continue
+        q_blocks = []
+        for qi in range(n_q):
+            q_lo, q_hi = qi * block_q, min(s, (qi + 1) * block_q)
+            qb = qg[:, q_lo:q_hi, hi]                        # (B, bq, G, hd)
+            m = jnp.full((b, q_hi - q_lo, g, 1), _NEG, jnp.float32)
+            l = jnp.zeros((b, q_hi - q_lo, g, 1), jnp.float32)
+            acc = jnp.zeros((b, q_hi - q_lo, g, hd), jnp.float32)
+            carry = (m, l, acc)
+            for ki in range(n_k):
+                k_lo, k_hi = ki * block_s, min(t, (ki + 1) * block_s)
+                live = k_lo < t_valid
+                if causal:
+                    live = live and (k_lo <= q_hi - 1)
+                if window is not None:
+                    live = live and (k_hi - 1 > q_lo - window)
+                if not live:
+                    continue
+                kb = k[:, k_lo:k_hi, hi].astype(jnp.float32)
+                vb = v[:, k_lo:k_hi, hi].astype(jnp.float32)
+
+                def upd(carry, kb=kb, vb=vb, k_lo=k_lo, k_hi=k_hi,
+                        q_lo=q_lo, q_hi=q_hi, qb=qb):
+                    m, l, acc = carry
+                    scores = jnp.einsum("bqgd,bsd->bqgs", qb, kb) * scale
+                    qpos = q_lo + jnp.arange(q_hi - q_lo)[:, None]
+                    kpos = k_lo + jnp.arange(k_hi - k_lo)[None, :]
+                    valid = kpos < t_valid
+                    if causal:
+                        valid = jnp.logical_and(valid, kpos <= qpos)
+                    if window is not None:
+                        valid = jnp.logical_and(valid, kpos > qpos - window)
+                    scores = jnp.where(valid[None, :, None, :], scores, _NEG)
+                    m_new = jnp.maximum(m, jnp.max(scores, -1, keepdims=True))
+                    alpha = jnp.exp(m - m_new)
+                    p = jnp.exp(scores - m_new)
+                    l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+                    a_new = acc * alpha + \
+                        jnp.einsum("bqgs,bsd->bqgd", p, vb)
+                    return (m_new, l_new, a_new)
+
+                if static_hm:
+                    carry = upd(carry)
+                else:
+                    carry = jax.lax.cond(head_mask[hi] > 0, upd,
+                                         lambda c: c, carry)
+            m, l, acc = carry
+            out_q = acc / jnp.maximum(l, 1e-30)
+            if not static_hm:
+                out_q = out_q * (head_mask[hi] > 0).astype(jnp.float32)
+            q_blocks.append(out_q)
+        heads.append(jnp.concatenate(q_blocks, axis=1))
+    out = jnp.stack(heads, axis=2)                           # (B, S, Hkv, G, hd)
     return out.reshape(b, s, h, hd)

@@ -64,25 +64,43 @@ def tile_norms(w: jnp.ndarray, block_k: int = 128, block_n: int = 128,
 def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                  pos: jnp.ndarray, block_s: int = 512,
                  window: int | None = None,
+                 head_mask=None, impl: str = "pallas",
                  interpret: bool | None = None) -> jnp.ndarray:
     """One-token GQA decode; pads the cache length to a block multiple.
-    q: (B, H, hd), k/v: (B, S, Hkv, hd), pos: (B,)."""
+    q: (B, H, hd), k/v: (B, S, Hkv, hd), pos: (B,).
+
+    ``head_mask`` (Hkv,) skips dead KV heads (block-pruned serving — see
+    decode_attention.py); a numpy mask on ``impl="xla"`` drops them at
+    trace time.  ``impl``: "pallas" (TPU / interpret) or "xla" (the
+    tile-loop twin, the fast CPU path)."""
+    if impl == "xla":
+        return _da.decode_attention_xla(q, k, v, pos, block_s=block_s,
+                                        window=window, head_mask=head_mask)
     interpret = _interpret_default() if interpret is None else interpret
     s = k.shape[1]
     block_s = min(block_s, max(128, 1 << (s - 1).bit_length()))
     if s % block_s:
         k = _pad_to(k, (1, block_s, 1, 1))
         v = _pad_to(v, (1, block_s, 1, 1))
+    hm = None if head_mask is None else jnp.asarray(head_mask)
     return _da.decode_attention(q, k, v, pos, block_s=block_s, window=window,
-                                interpret=interpret)
+                                head_mask=hm, interpret=interpret)
 
 
 def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, window: int | None = None,
                   block_q: int = 256, block_s: int = 512,
+                  head_mask=None, impl: str = "pallas",
                   interpret: bool | None = None) -> jnp.ndarray:
     """Full-sequence GQA flash attention with auto padding.
-    q: (B, S, H, hd), k/v: (B, T, Hkv, hd) -> (B, S, H, hd) f32."""
+    q: (B, S, H, hd), k/v: (B, T, Hkv, hd) -> (B, S, H, hd) f32.
+
+    ``head_mask`` / ``impl`` as in ``flash_decode``."""
+    if impl == "xla":
+        return _fp.flash_prefill_xla(q, k, v, block_q=block_q,
+                                     block_s=block_s, causal=causal,
+                                     window=window, t_valid=k.shape[1],
+                                     head_mask=head_mask)
     interpret = _interpret_default() if interpret is None else interpret
     s, t = q.shape[1], k.shape[1]
     block_q = min(block_q, max(16, 1 << (s - 1).bit_length()))
@@ -90,9 +108,10 @@ def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     qp = _pad_to(q, (1, block_q, 1, 1))
     kp = _pad_to(k, (1, block_s, 1, 1))
     vp = _pad_to(v, (1, block_s, 1, 1))
+    hm = None if head_mask is None else jnp.asarray(head_mask)
     out = _fp.flash_prefill(qp, kp, vp, block_q=block_q, block_s=block_s,
                             causal=causal, window=window, t_valid=t,
-                            interpret=interpret)
+                            head_mask=hm, interpret=interpret)
     return out[:, :s]
 
 

@@ -40,11 +40,14 @@ def block_norms(w: jnp.ndarray, block_k: int, block_n: int) -> jnp.ndarray:
 def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       causal: bool = True, window: int | None = None,
                       t_valid: int | None = None,
-                      scale: float | None = None) -> jnp.ndarray:
+                      scale: float | None = None,
+                      head_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """Full-sequence GQA attention oracle.
 
     q: (B, S, H, hd); k, v: (B, T, Hkv, hd).  Query i sits at absolute
-    position i; keys at 0..T-1.  Returns (B, S, H, hd) float32.
+    position i; keys at 0..T-1.  ``head_mask`` (Hkv,) zeros the output of
+    dead KV heads (the lossless block-pruned-serving skip — see
+    decode_attention.py).  Returns (B, S, H, hd) float32.
     """
     b, s, h, hd = q.shape
     t, hkv = k.shape[1], k.shape[2]
@@ -64,17 +67,22 @@ def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     scores = jnp.where(valid[None, :, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bskgt,btkd->bskgd", probs, v.astype(jnp.float32))
+    if head_mask is not None:
+        live = (jnp.asarray(head_mask) > 0).astype(jnp.float32)
+        out = out * live[None, None, :, None, None]
     return out.reshape(b, s, h, hd)
 
 
 def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                      pos: jnp.ndarray, window: int | None = None,
-                     scale: float | None = None) -> jnp.ndarray:
+                     scale: float | None = None,
+                     head_mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """One-token GQA decode.
 
     q: (B, H, hd); k, v: (B, S, Hkv, hd); pos: (B,) absolute position of
     the query token (keys at indices <= pos are valid, and > pos - window
-    if windowed).  Returns (B, H, hd) float32.
+    if windowed).  ``head_mask`` (Hkv,) zeros the output of dead KV heads.
+    Returns (B, H, hd) float32.
     """
     b, h, hd = q.shape
     s, hkv = k.shape[1], k.shape[2]
@@ -90,4 +98,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    if head_mask is not None:
+        live = (jnp.asarray(head_mask) > 0).astype(jnp.float32)
+        out = out * live[None, :, None, None]
     return out.reshape(b, h, hd)

@@ -1,0 +1,14 @@
+"""Block-sparse serving: export pruned fleet checkpoints and decode them
+with the training tile masks (see docs/serving.md)."""
+
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.export import (PrunedBundle, export_from_result,
+                                export_pruned, load_pruned, make_bundle)
+from repro.serve.model import SparseModel
+from repro.serve.sparse import IMPLS, apply_linear, make_linear
+
+__all__ = [
+    "ServeConfig", "ServeEngine",
+    "PrunedBundle", "export_pruned", "export_from_result", "load_pruned",
+    "make_bundle", "SparseModel", "IMPLS", "make_linear", "apply_linear",
+]

@@ -1,0 +1,158 @@
+"""Continuous-batching serve engine over a ``SparseModel``.
+
+The whole serving loop is ONE jitted ``lax.scan``: B KV "pages" (slots)
+of fixed length, a request queue walked by an on-device cursor, greedy
+decode, and slot recycling the step a request emits its last token — no
+host round-trips between tokens, which is what makes CPU tokens/s a
+kernel benchmark instead of a dispatch benchmark.
+
+Slot recycling reuses KV pages *without clearing them*: a finished
+slot's position resets to 0 and the cache validity rule (kpos <= pos)
+hides the stale tail, exactly as the training-side decode cache does on
+warm-up.  Requests are fixed-shape (prompt length P, G new tokens); row
+R of the padded buffers is a write dump for parked slots.
+
+``generate``          token-level continuous batching: prompts stream
+                      through the decode path one token per step, so a
+                      slot can be mid-prompt while its neighbour decodes.
+``generate_prefilled``wave mode: batch prefill (the mask-aware flash
+                      kernel) then a decode-only scan — the classic
+                      prefill/decode split, same outputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 32          # concurrent KV pages (the serving batch)
+    page_len: int = 128          # KV page length >= P + max_new - 1
+    max_new: int = 32            # generated tokens per request
+
+
+class ServeEngine:
+    def __init__(self, model, config: ServeConfig = ServeConfig()):
+        self.model = model
+        self.config = config
+        self._fns: dict = {}
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts, max_new: Optional[int] = None,
+                 return_logits: bool = False):
+        """Greedy-decode ``max_new`` tokens for each prompt row.
+
+        prompts: (R, P) int32.  Returns tokens (R, G) int32, or
+        (tokens, logits (R, G, V) f32) with ``return_logits``.
+        """
+        prompts = jnp.asarray(prompts, jnp.int32)
+        r, p = prompts.shape
+        g = self.config.max_new if max_new is None else max_new
+        self._check(p, g)
+        key = ("cb", r, p, g, return_logits)
+        if key not in self._fns:
+            self._fns[key] = jax.jit(functools.partial(
+                self._run_continuous, r=r, p=p, g=g,
+                return_logits=return_logits))
+        out = self._fns[key](self.model.arrays, prompts)
+        if return_logits:
+            return np.asarray(out[0][:r]), np.asarray(out[1][:r])
+        return np.asarray(out[:r])
+
+    def generate_prefilled(self, prompts, max_new: Optional[int] = None):
+        """Wave mode: prefill a full batch, then scan decode steps."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        r, p = prompts.shape
+        g = self.config.max_new if max_new is None else max_new
+        self._check(p, g)
+        b = self.config.max_slots
+        pad = (-r) % b
+        if pad:
+            prompts = jnp.concatenate(
+                [prompts, jnp.zeros((pad, p), jnp.int32)], 0)
+        key = ("wave", b, p, g)
+        if key not in self._fns:
+            self._fns[key] = jax.jit(functools.partial(
+                self._run_wave, p=p, g=g))
+        waves = [self._fns[key](self.model.arrays, prompts[i:i + b])
+                 for i in range(0, r + pad, b)]
+        return np.concatenate(waves, axis=0)[:r]
+
+    # ------------------------------------------------------------------
+    def _check(self, p: int, g: int) -> None:
+        if p + g - 1 > self.config.page_len:
+            raise ValueError(
+                f"P + G - 1 = {p + g - 1} exceeds page_len "
+                f"{self.config.page_len}")
+
+    def _run_continuous(self, arrays, prompts, *, r, p, g, return_logits):
+        model, cfg = self.model, self.config
+        b = cfg.max_slots
+        steps_per = p + g - 1
+        total = -(-r // b) * steps_per
+        vocab = model.cfg.vocab_size
+        prompts_pad = jnp.concatenate(
+            [prompts, jnp.zeros((1, p), jnp.int32)], 0)   # row r = dump
+        caches0 = model.init_caches(b, cfg.page_len)
+        out0 = jnp.zeros((r + 1, g), jnp.int32)
+        lout0 = jnp.zeros((r + 1, g, vocab), jnp.float32) \
+            if return_logits else jnp.zeros((), jnp.float32)
+
+        def step(carry, _):
+            caches, req, tpos, last, nxt, out, lout = carry
+            row = jnp.minimum(req, r)
+            tok = jnp.where(tpos < p,
+                            prompts_pad[row, jnp.minimum(tpos, p - 1)], last)
+            logits, caches2 = model.decode_step(arrays, tok[:, None],
+                                                caches, tpos)
+            nxt_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            gen_idx = tpos - (p - 1)
+            emit = (gen_idx >= 0) & (req < r)
+            erow = jnp.where(emit, req, r)
+            ecol = jnp.clip(gen_idx, 0, g - 1)
+            out2 = out.at[erow, ecol].set(nxt_tok)
+            lout2 = lout.at[erow, ecol].set(logits) if return_logits else lout
+            # recycle finished slots: next queued request, page pos -> 0
+            # (stale KV hidden by kpos <= pos validity)
+            finish = tpos >= steps_per - 1
+            rank = jnp.cumsum(finish.astype(jnp.int32)) - finish
+            req2 = jnp.where(finish, nxt + rank, req)
+            nxt2 = nxt + jnp.sum(finish.astype(jnp.int32))
+            tpos2 = jnp.where(finish, 0, tpos + 1)
+            last2 = jnp.where(finish, 0, nxt_tok)
+            return (caches2, req2, tpos2, last2, nxt2, out2, lout2), None
+
+        init = (caches0, jnp.arange(b, dtype=jnp.int32),
+                jnp.zeros((b,), jnp.int32), jnp.zeros((b,), jnp.int32),
+                jnp.int32(b), out0, lout0)
+        carry, _ = jax.lax.scan(step, init, None, length=total)
+        if return_logits:
+            return carry[5], carry[6]
+        return carry[5]
+
+    def _run_wave(self, arrays, prompts, *, p, g):
+        model, cfg = self.model, self.config
+        b = prompts.shape[0]
+        logits0, caches = model.prefill(arrays, prompts, cfg.page_len)
+        first = jnp.argmax(logits0[:, -1], axis=-1).astype(jnp.int32)
+
+        def step(carry, i):
+            caches, tok = carry
+            logits, caches2 = model.decode_step(
+                arrays, tok[:, None], caches,
+                jnp.full((b,), p, jnp.int32) + i)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (caches2, nxt), nxt
+
+        (_, _), rest = jax.lax.scan(step, (caches, first),
+                                    jnp.arange(g - 1, dtype=jnp.int32))
+        return jnp.concatenate([first[:, None], rest.T], axis=1)

@@ -1,0 +1,116 @@
+"""Export a trained (block-pruned) fleet model for sparse serving.
+
+The bundle is the bridge between training and the serve hot path: the
+final round's parameters plus the *same* per-leaf tile keeps the training
+kernels pruned with (``core.pruning.block_keep`` over the task's tile
+grid).  Serving then reuses ``block_sparse_matmul``'s (Tk, Tn) tile
+layout directly — no re-derivation, no drift: the masks applied at decode
+are bitwise the masks of the last training round (pinned by
+tests/test_serve.py's round-trip test).
+
+On-disk format (``checkpoint.save`` .npz):
+    params/...        the parameter pytree, unmasked
+    keeps/k{i:04d}    float 0/1 tile keep for flattened leaf i (prunable
+                      leaves only; shape = lead_dims + (Tk, Tn))
+    meta/rho          scalar pruning rate the keeps were computed at
+    meta/grid         (num_leaves, 2) int32 per-leaf (bk, bn); -1 rows
+                      mark unprunable leaves
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import pruning
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PrunedBundle:
+    """A serve-ready model: params + the training tile masks."""
+    params: PyTree
+    keeps: list                 # per-flat-leaf tile keep, None if unprunable
+    grid: list                  # per-flat-leaf (bk, bn), None if unprunable
+    rho: float
+
+    def masks(self) -> PyTree:
+        """Element-level masks (the dense oracle's view of the keeps)."""
+        return pruning.masks_from_keep(self.params, self.keeps, self.grid)
+
+    def masked_params(self) -> PyTree:
+        return pruning.apply_masks(self.params, self.masks())
+
+
+def _leaf_grid(params: PyTree, block) -> list:
+    _, _, flags = pruning._flatten_prunable(params)
+    return pruning.leaf_blocks(flags, block)
+
+
+def make_bundle(task, params: PyTree, rho: float) -> PrunedBundle:
+    """Compute the tile keeps for ``params`` at rate ``rho`` using the
+    task's tile grid — the exact code path the training round used."""
+    block = task.tile_grid(params)
+    state = pruning.block_norm_state(params, block)
+    keeps = pruning.block_keep(state, jnp.float32(rho))
+    keeps = [None if k is None else np.asarray(k) for k in keeps]
+    return PrunedBundle(params=params, keeps=keeps,
+                        grid=_leaf_grid(params, block), rho=float(rho))
+
+
+def export_pruned(path: str, task, params: PyTree, rho: float) -> PrunedBundle:
+    """Export ``params`` pruned at rate ``rho`` to ``path`` (.npz)."""
+    bundle = make_bundle(task, params, rho)
+    leaves = jax.tree_util.tree_leaves(params)
+    grid_arr = np.full((len(leaves), 2), -1, np.int32)
+    keep_tree = {}
+    for i, (keep, blk) in enumerate(zip(bundle.keeps, bundle.grid)):
+        if keep is None:
+            continue
+        grid_arr[i] = blk
+        keep_tree[f"k{i:04d}"] = keep.astype(np.float32)
+    checkpoint.save(path, {
+        "params": params,
+        "keeps": keep_tree,
+        "meta": {"rho": np.float32(rho), "grid": grid_arr},
+    })
+    return bundle
+
+
+def export_from_result(path: str, task, result,
+                       rho: Optional[float] = None) -> PrunedBundle:
+    """Export a ``run_fleet`` result: its final params, pruned at the
+    fleet's final-round mean rate unless ``rho`` overrides."""
+    if rho is None:
+        rho = float(np.asarray(result.mean_prune)[-1])
+    return export_pruned(path, task, result.params, rho)
+
+
+def load_pruned(path: str, task) -> PrunedBundle:
+    """Load a bundle; parameter shapes come from ``task.init_params``
+    (via eval_shape — nothing is actually initialized)."""
+    shapes = jax.eval_shape(task.init_params, jax.random.PRNGKey(0))
+    like = jax.tree_util.tree_map(
+        lambda s: np.zeros(s.shape, s.dtype), shapes)
+    tree = checkpoint.restore(path, {"params": like})
+    params = tree["params"]
+    flat = checkpoint.restore_flat(path)
+    rho = float(flat["meta/rho"])
+    grid_arr = np.asarray(flat["meta/grid"])
+    n = len(jax.tree_util.tree_leaves(params))
+    keeps, grid = [], []
+    for i in range(n):
+        key = f"keeps/k{i:04d}"
+        if key in flat:
+            keeps.append(np.asarray(flat[key]))
+            grid.append((int(grid_arr[i, 0]), int(grid_arr[i, 1])))
+        else:
+            keeps.append(None)
+            grid.append(None)
+    return PrunedBundle(params=params, keeps=keeps, grid=grid, rho=rho)
